@@ -1,0 +1,26 @@
+"""Paper Fig. 14 — communication overhead η*(α) from density evolution.
+
+Claim: η* is minimized near α = 0.5 (the design point that also makes the
+skip-sampling CDF collapse to a closed form), with η*(0.5) ≈ 1.35.
+"""
+from __future__ import annotations
+
+from repro.core import de
+
+from .common import emit
+
+
+def main(quick: bool = True):
+    alphas = [0.25, 0.4, 0.5, 0.65, 0.8, 1.0] if quick else \
+        [0.1, 0.2, 0.3, 0.4, 0.45, 0.5, 0.55, 0.6, 0.7, 0.8, 1.0, 1.2, 1.5]
+    best = (None, float("inf"))
+    for a in alphas:
+        eta = de.eta_star(a)
+        if eta < best[1]:
+            best = (a, eta)
+        emit(f"fig14_eta_star_alpha{a}", 0.0, f"eta_star={eta:.4f}")
+    emit("fig14_minimum", 0.0, f"alpha={best[0]} eta={best[1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

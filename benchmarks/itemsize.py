@@ -1,0 +1,36 @@
+"""Paper Fig. 10 — slowdown when encoding items of growing size ℓ.
+
+Claim: sublinear slowdown while fixed per-item costs dominate (ℓ ≤ ~2 KB),
+then linear (XOR bandwidth-bound); i.e. bytes/s throughput flattens.
+"""
+from __future__ import annotations
+
+from .common import emit, make_sets, timeit
+
+N = 5_000
+D = 100
+
+
+def main(quick: bool = True):
+    sizes = [8, 32, 128, 1024, 4096] if quick else \
+        [8, 32, 128, 512, 2048, 8192, 32768]
+    base = None
+    m = int(1.6 * D)
+    for nbytes in sizes:
+        from repro.core import Encoder
+        a, _, _, _ = make_sets(N - D, D, 0, nbytes)
+
+        def run():
+            e = Encoder(nbytes)
+            e.add_items(a)
+            return e.symbols(m)
+
+        dt, _ = timeit(run, repeat=2)
+        if base is None:
+            base = dt
+        emit(f"fig10_itemsize_{nbytes}B", dt * 1e6,
+             f"slowdown={dt / base:.2f} MBps={N * nbytes / dt / 1e6:.1f}")
+
+
+if __name__ == "__main__":
+    main()

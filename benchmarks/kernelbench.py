@@ -1,0 +1,39 @@
+"""Device-encoder microbench (framework-side, not a paper figure).
+
+Times the two Pallas kernels in interpret mode (functional check only —
+interpret timings are NOT device timings; real perf analysis for the TPU
+target lives in EXPERIMENTS.md §Roofline/§Perf where we reason from the
+lowered HLO) and the host encoder they are validated against.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import emit, timeit
+
+ITEM_WORDS = 2  # 8-byte items, as in paper §7.2
+
+
+def main(quick: bool = True):
+    import jax.numpy as jnp
+
+    from repro.core.encoder import encode
+    from repro.kernels.ops import encode_device
+
+    n, m = (2048, 512) if quick else (16384, 4096)
+    items = np.random.default_rng(1).integers(
+        0, 2**32, size=(n, ITEM_WORDS), dtype=np.uint32)
+
+    dt, _ = timeit(lambda: encode(items, 4 * ITEM_WORDS, m), repeat=2)
+    emit(f"host_encode_n{n}_m{m}", dt * 1e6,
+         f"MBps={n * 4 * ITEM_WORDS / dt / 1e6:.1f}")
+
+    ji = jnp.asarray(items)
+    dt, _ = timeit(lambda: encode_device(ji, m=m, nbytes=4 * ITEM_WORDS),
+                   repeat=1)
+    emit(f"device_encode_interpret_n{n}_m{m}", dt * 1e6,
+         "(interpret-mode functional check, not TPU timing)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,163 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Terms per (arch × shape × mesh), all in seconds per step, TPU v5e:
+
+  compute    = HLO_FLOPs_per_device / 197e12        (bf16 peak per chip)
+  memory     = HLO_bytes_per_device / 819e9         (HBM bw per chip)
+  collective = collective_operand_bytes / 50e9      (per-link ICI bw)
+
+cost_analysis() reports the per-device SPMD program, so terms are already
+per-chip.  MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference), N = active
+params for MoE; the ratio MODEL_FLOPS/(HLO_FLOPs·devices) exposes remat and
+redundant-compute waste (it exceeds ~1/3 only if remat is free, so ~0.25-0.5
+is healthy for remat'd training).
+
+    PYTHONPATH=src python -m benchmarks.roofline [--mesh pod]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "out", "dryrun")
+
+_PARAM_CACHE = {}
+
+
+def param_counts(arch: str):
+    """(total, active) parameter counts via abstract init (no allocation)."""
+    if arch in _PARAM_CACHE:
+        return _PARAM_CACHE[arch]
+    import jax
+
+    from repro.configs import get_config
+    from repro.launch.mesh import make_local_mesh
+    from repro.models import build_model
+
+    cfg = get_config(arch)
+    mesh = make_local_mesh()
+    model = build_model(cfg, mesh)
+    shapes = jax.eval_shape(lambda k: model.init(k)[0], jax.random.key(0))
+    total = 0
+    active = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        if cfg.n_experts and cfg.n_experts in leaf.shape:
+            n = n * cfg.experts_per_token // cfg.n_experts
+        active += n
+    _PARAM_CACHE[arch] = (total, active)
+    return total, active
+
+
+def scan_trips(rec: dict) -> int:
+    """XLA:CPU cost_analysis counts while/scan bodies ONCE; the layer stack
+    runs n_periods times (× microbatches for train).  We scale flops/bytes/
+    collective-bytes by this static trip count — it overcounts the
+    outside-of-scan prologue (embed/logits/optimizer), so treat the terms
+    as upper-bound estimates good for dominant-term identification (the
+    per-cell JSON keeps the raw uncorrected numbers)."""
+    from repro.configs import get_config, get_shape
+    cfg = get_config(rec["arch"])
+    shape = get_shape(rec["shape"])
+    trips = max(cfg.n_layers // max(len(cfg.block_pattern), 1), 1)
+    if shape.kind == "train":
+        trips *= max(cfg.microbatches, 1)
+    return trips
+
+
+def analyze(rec: dict) -> dict:
+    from repro.configs import get_shape
+    shape = get_shape(rec["shape"])
+    trips = scan_trips(rec)
+    flops = rec["flops_per_device"] * trips
+    # bytes: the parameter/optimizer streams run once per step, not per
+    # scan trip — scale only the remainder (activation traffic).
+    args_rw = 2 * rec["memory"].get("argument_size_in_bytes", 0)
+    stack_bytes = max(rec["bytes_per_device"] - args_rw, 0)
+    bytes_ = stack_bytes * trips + args_rw
+    comp = flops / PEAK_FLOPS
+    memt = bytes_ / HBM_BW
+    coll_bytes = sum(v["bytes"] for v in rec["collectives"].values()) * trips
+    coll = coll_bytes / LINK_BW
+    dom = max(("compute", comp), ("memory", memt), ("collective", coll),
+              key=lambda kv: kv[1])
+    total, active = param_counts(rec["arch"])
+    n = active
+    if shape.kind == "train":
+        model_flops = 6 * n * shape.global_batch * shape.seq_len
+    elif shape.kind == "prefill":
+        model_flops = 2 * n * shape.global_batch * shape.seq_len
+    else:
+        model_flops = 2 * n * shape.global_batch  # one token per request
+    hlo_total = flops * rec["devices"]
+    ratio = model_flops / hlo_total if hlo_total > 0 else 0.0
+    peak_gb = (rec["memory"].get("argument_size_in_bytes", 0) +
+               rec["memory"].get("temp_size_in_bytes", 0)) / 2**30
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": comp, "memory_s": memt, "collective_s": coll,
+        "dominant": dom[0], "bound_s": dom[1],
+        "model_flops": model_flops, "useful_ratio": ratio,
+        "roofline_fraction": min(comp, memt, coll) and
+        (model_flops / rec["devices"] / PEAK_FLOPS) / max(comp, memt, coll),
+        "peak_gb_per_dev": peak_gb,
+        "fits_16g": peak_gb <= 16.0,
+        "collectives": rec["collectives"],
+    }
+
+
+def lever(row) -> str:
+    d = row["dominant"]
+    if d == "compute":
+        if row["useful_ratio"] < 0.25:
+            return "compute-bound with low useful ratio: cut remat recompute"
+        return "compute-bound near useful peak: only sharper kernels help"
+    if d == "memory":
+        return "HBM-bound: fuse/bf16-ize the big streams, raise arithmetic"\
+            " intensity (larger microbatch per step)"
+    return "collective-bound: reshard to cut the dominant collective or "\
+        "overlap it with compute"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None, choices=[None, "pod", "multipod"])
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+    rows = []
+    for path in sorted(glob.glob(os.path.join(OUT_DIR, "*.json"))):
+        rec = json.load(open(path))
+        if args.mesh and rec["mesh"] != args.mesh:
+            continue
+        rows.append(analyze(rec))
+    if not rows:
+        print("no dry-run artifacts; run python -m repro.launch.dryrun --all")
+        return
+    hdr = ("arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
+           "dominant", "useful_ratio", "roofline_fraction",
+           "peak_gb_per_dev", "fits_16g")
+    if args.csv:
+        print(",".join(hdr))
+        for r in rows:
+            print(",".join(f"{r[h]:.4g}" if isinstance(r[h], float)
+                           else str(r[h]) for h in hdr))
+        return
+    print("| " + " | ".join(hdr) + " | lever |")
+    print("|" + "---|" * (len(hdr) + 1))
+    for r in rows:
+        cells = [f"{r[h]:.3g}" if isinstance(r[h], float) else str(r[h])
+                 for h in hdr]
+        print("| " + " | ".join(cells) + " | " + lever(r) + " |")
+
+
+if __name__ == "__main__":
+    main()

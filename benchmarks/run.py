@@ -1,0 +1,54 @@
+"""Benchmark runner — one module per paper figure/table.
+
+``python -m benchmarks.run``            quick CI-scale sweep
+``python -m benchmarks.run --full``     paper-scale sweep (slow)
+``python -m benchmarks.run --only fig7``
+``python -m benchmarks.run --roofline`` include roofline table rendering
+                                        (requires dry-run artifacts)
+
+Output: ``name,us_per_call,derived`` CSV on stdout.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="substring filter, e.g. fig7 / statesync / kernel")
+    ap.add_argument("--roofline", action="store_true",
+                    help="render roofline table from dry-run artifacts")
+    args = ap.parse_args()
+
+    from . import alpha, itemsize, kernelbench, overhead, setsize, statesync, throughput
+    suites = [
+        ("overhead", overhead),      # Figs 4, 6
+        ("throughput", throughput),  # Figs 7, 8
+        ("setsize", setsize),        # Fig 9
+        ("itemsize", itemsize),      # Fig 10
+        ("statesync", statesync),    # Figs 11, 12
+        ("alpha", alpha),            # Fig 14
+        ("kernelbench", kernelbench),  # device-encoder kernel (framework)
+    ]
+    for name, mod in suites:
+        if args.only and args.only not in name:
+            continue
+        print(f"# === {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            mod.main(quick=not args.full)
+        except Exception as e:  # keep the suite going; report the failure
+            print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)
+        print(f"# === {name} done in {time.time() - t0:.1f}s ===", flush=True)
+
+    if args.roofline:
+        from . import roofline
+        roofline.main()
+
+
+if __name__ == "__main__":
+    main()

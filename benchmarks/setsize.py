@@ -1,0 +1,37 @@
+"""Paper Fig. 9 — encoding time vs set size N at fixed difference.
+
+Claim: encode cost is linear in N (each source symbol does the same
+O(log m) mapping work), while decode cost is independent of N.
+"""
+from __future__ import annotations
+
+from .common import emit, make_sets, timeit
+
+ITEM = 8
+D = 100
+
+
+def main(quick: bool = True):
+    Ns = [1_000, 10_000, 100_000] if quick else \
+        [1_000, 10_000, 100_000, 1_000_000]
+    m = int(1.6 * D)
+    base = None
+    for N in Ns:
+        from repro.core import Encoder
+        a, _, _, _ = make_sets(N - D, D, 0, ITEM)
+
+        def run():
+            e = Encoder(ITEM)
+            e.add_items(a)
+            return e.symbols(m)
+
+        dt, _ = timeit(run, repeat=2)
+        if base is None:
+            base = (N, dt)
+        emit(f"fig9_encode_N{N}_d{D}", dt * 1e6,
+             f"time_ratio={dt / base[1]:.2f} size_ratio={N / base[0]:.0f} "
+             f"MBps={N * ITEM / dt / 1e6:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Paper Figs. 7 & 8 — encoding/decoding throughput vs difference size.
+
+Encoding throughput = d / time for Alice to produce enough coded symbols
+(~1.35d) for a set of N items.  Decoding throughput = d / time to peel.
+Items are 8 bytes (the paper fixes ℓ=8 to match PinSketch's limit).
+
+Expected qualitative behavior (paper §7.2): Rateless IBLT encode time grows
+~logarithmically in d (sparse mapping) while CPI/PinSketch grows linearly;
+decode is O(d·log d) vs O(d²) [here O(d³): textbook interpolation].
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import emit, make_sets, timeit
+
+ITEM = 8
+
+
+def riblt_encode_bench(N: int, d: int, repeat=3):
+    from repro.core import Encoder
+    a, _, _, _ = make_sets(N - d, d, 0, ITEM)
+    m = int(1.35 * d) + 2
+
+    def run():
+        enc = Encoder(ITEM)
+        enc.add_items(a)
+        return enc.symbols(m)
+
+    dt, _ = timeit(run, repeat=repeat)
+    return dt
+
+
+def riblt_decode_bench(d: int, repeat=3):
+    from repro.core import Encoder, peel
+    a, b, _, _ = make_sets(0, d // 2, d - d // 2, ITEM)
+    m = 8 + int(2.0 * d)  # enough to decode comfortably
+    A = Encoder(ITEM)
+    A.add_items(a)
+    B = Encoder(ITEM)
+    if len(b):
+        B.add_items(b)
+    diff = A.symbols(m).subtract(B.symbols(m))
+    dt, res = timeit(peel, diff, repeat=repeat)
+    assert res.success
+    return dt
+
+
+def cpi_encode_bench(N: int, d: int, repeat=1):
+    from repro.core.baselines.cpi import CPISketch
+    from repro.core.hashing import bytes_to_words
+    a, _, _, _ = make_sets(N - d, d, 0, ITEM)
+    aw = bytes_to_words(a, ITEM)
+
+    def run():
+        s = CPISketch(d, ITEM)
+        s.insert(aw)
+        return s
+
+    dt, _ = timeit(run, repeat=repeat)
+    return dt
+
+
+def cpi_decode_bench(d: int, repeat=1):
+    from repro.core.baselines.cpi import CPISketch
+    from repro.core.hashing import bytes_to_words
+    a, b, _, _ = make_sets(50, d // 2, d - d // 2, ITEM)
+    m = d + 2
+    A = CPISketch(m, ITEM)
+    B = CPISketch(m, ITEM)
+    A.insert(bytes_to_words(a, ITEM))
+    B.insert(bytes_to_words(b, ITEM))
+    dt, out = timeit(A.decode_against, B, d_bound=d, repeat=repeat)
+    assert out[2], "CPI decode failed"
+    return dt
+
+
+def main(quick: bool = True):
+    Ns = [10_000] if quick else [10_000, 1_000_000]
+    ds = [10, 100, 1000] if quick else [2, 10, 100, 1000, 10_000, 100_000]
+    for N in Ns:
+        for d in ds:
+            if d >= N:
+                continue
+            dt = riblt_encode_bench(N, d)
+            emit(f"fig7_riblt_encode_N{N}_d{d}", dt * 1e6,
+                 f"items_per_s={N / dt:.0f} diffs_per_s={d / dt:.0f} "
+                 f"MBps={N * ITEM / dt / 1e6:.1f}")
+    for d in ds:
+        dt = riblt_decode_bench(d)
+        emit(f"fig8_riblt_decode_d{d}", dt * 1e6,
+             f"diffs_per_s={d / dt:.0f}")
+    cpi_ds = [10, 50, 100] if quick else [10, 50, 100, 256]
+    for d in cpi_ds:
+        dt = cpi_encode_bench(10_000, d)
+        emit(f"fig7_cpi_encode_N10000_d{d}", dt * 1e6,
+             f"diffs_per_s={d / dt:.0f}")
+        dt = cpi_decode_bench(d)
+        emit(f"fig8_cpi_decode_d{d}", dt * 1e6, f"diffs_per_s={d / dt:.0f}")
+
+
+if __name__ == "__main__":
+    main()

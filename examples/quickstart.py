@@ -1,0 +1,30 @@
+"""Quickstart: reconcile two sets with Rateless IBLT (paper's core API).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import Sketch, reconcile_sets
+
+rng = np.random.default_rng(0)
+
+# two parties hold large, mostly-overlapping sets of 32-byte items
+common = [bytes([0]) + rng.bytes(31) for _ in range(100_000)]
+only_alice = [bytes([1]) + rng.bytes(31) for _ in range(30)]
+only_bob = [bytes([2]) + rng.bytes(31) for _ in range(12)]
+
+alice = Sketch.from_items(common + only_alice, nbytes=32)
+bob = Sketch.from_items(common + only_bob, nbytes=32)
+
+# Alice streams coded symbols; Bob peels as they arrive and stops the
+# stream the moment symbol 0 empties.  Nobody knew d = 42 in advance.
+got_a, got_b, m_used = reconcile_sets(alice, bob)
+
+d = len(only_alice) + len(only_bob)
+print(f"difference size d = {d}")
+print(f"coded symbols used = {m_used}  (overhead {m_used/d:.2f}x, "
+      f"paper: 1.35-1.72x)")
+print(f"bytes ~= {m_used * (32+8+1)} vs naive {len(common+only_alice)*32}")
+assert sorted(x.tobytes() for x in got_a) == sorted(only_alice)
+assert sorted(x.tobytes() for x in got_b) == sorted(only_bob)
+print("recovered symmetric difference exactly. ✓")

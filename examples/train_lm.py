@@ -1,0 +1,30 @@
+"""Train a ~100M-param LM for a few hundred steps on the framework's full
+training substrate (sharded step, optimizer, checkpointing).
+
+CPU-friendly default trains a smaller variant; pass --full-100m on real
+hardware.  Also demonstrates crash recovery: run with --fail-at N, re-run,
+and training resumes from the checkpoint.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+"""
+import argparse
+import subprocess
+import sys
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--arch", default="yi-9b")
+ap.add_argument("--fail-at", type=int, default=0)
+ap.add_argument("--full-100m", action="store_true")
+args = ap.parse_args()
+
+cmd = [sys.executable, "-m", "repro.launch.train", "--arch", args.arch,
+       "--steps", str(args.steps), "--ckpt-dir", "out/example_ckpt"]
+if not args.full_100m:
+    cmd += ["--smoke", "--batch", "8", "--seq", "128"]
+else:
+    cmd += ["--batch", "32", "--seq", "1024"]
+if args.fail_at:
+    cmd += ["--fail-at", str(args.fail_at)]
+print("running:", " ".join(cmd))
+sys.exit(subprocess.call(cmd))

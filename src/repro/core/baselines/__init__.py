@@ -1,0 +1,8 @@
+"""Baselines the paper compares against (§7): regular IBLT [12], MET-IBLT
+[15], CPI/PinSketch [19, 6], and Merkle-trie state sync [38]."""
+from .regular_iblt import RegularIBLT
+from .met_iblt import MetIBLT
+from .cpi import CPISketch
+from .merkle import MerkleTrieSync
+
+__all__ = ["RegularIBLT", "MetIBLT", "CPISketch", "MerkleTrieSync"]

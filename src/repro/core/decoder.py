@@ -1,0 +1,91 @@
+"""Peeling decoder (paper §3) — vectorized host path + device path.
+
+A coded symbol is *pure* when its checksum equals the keyed hash of its sum;
+its sum is then a source symbol.  We peel in vectorized waves: find every
+pure symbol, dedupe recovered items by checksum, XOR each item out of its
+whole mapped-index chain, repeat.  Success ⇔ all symbols end empty — and by
+the ρ(0)=1 property symbol 0 empties last, which is the stream-termination
+signal used by the incremental decoder.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .encoder import _xor_accumulate
+from .hashing import DEFAULT_KEY, siphash24
+from .mapping import _jump_np, map_seeds
+from .symbols import CodedSymbols
+
+
+@dataclasses.dataclass
+class PeelResult:
+    items: np.ndarray    # (r, L) uint32 recovered source symbols
+    sides: np.ndarray    # (r,) int8 — +1 exclusive to A, −1 exclusive to B
+    success: bool        # all source symbols recovered (symbols all empty)
+    rounds: int
+
+
+def peel(sym: CodedSymbols, key=DEFAULT_KEY, max_rounds: int = 10_000) -> PeelResult:
+    sym = sym.copy()
+    m = sym.m
+    rec_items = []
+    rec_sides = []
+    seen = set()
+    rounds = 0
+    # candidate indices to re-test for purity (all, initially)
+    cand = np.arange(m, dtype=np.int64)
+    while rounds < max_rounds and cand.size:
+        rounds += 1
+        h = siphash24(sym.sums[cand], key, sym.nbytes)
+        pure = cand[(h == sym.checks[cand]) & (sym.counts[cand] != 0)]
+        if pure.size == 0:
+            break
+        items = sym.sums[pure]
+        hashes = sym.checks[pure]
+        sides = np.sign(sym.counts[pure]).astype(np.int8)
+        # dedupe: one item may be pure at several indices simultaneously
+        _, first = np.unique(hashes, return_index=True)
+        items, hashes, sides = items[first], hashes[first], sides[first]
+        ok = np.array([h not in seen for h in hashes.tolist()])
+        items, hashes, sides = items[ok], hashes[ok], sides[ok]
+        if items.shape[0] == 0:
+            break
+        seen.update(hashes.tolist())
+        rec_items.append(items)
+        rec_sides.append(sides)
+        # XOR every recovered item out of its whole chain
+        seeds = map_seeds(items, key, sym.nbytes)
+        touched = _remove_chains(sym, items, hashes, sides, seeds, key)
+        cand = np.unique(touched)
+    items = np.concatenate(rec_items) if rec_items else np.zeros((0, sym.L), np.uint32)
+    sides = np.concatenate(rec_sides) if rec_sides else np.zeros(0, np.int8)
+    success = bool(sym.is_empty().all())
+    return PeelResult(items, sides, success, rounds)
+
+
+def _remove_chains(sym: CodedSymbols, items, hashes, sides, seeds, key):
+    """XOR items out of all their mapped indices < m.  Returns touched rows."""
+    m = sym.m
+    n = items.shape[0]
+    nxt = np.zeros(n, np.int64)
+    state = seeds.astype(np.uint64).copy()
+    touched = []
+    while True:
+        live = np.flatnonzero(nxt < m)
+        if live.size == 0:
+            break
+        idx = nxt[live]
+        touched.append(idx.copy())
+        _xor_accumulate(sym.sums, sym.checks, sym.counts, idx, items[live],
+                        hashes[live], -sides[live].astype(np.int64))
+        nn, ns = _jump_np(idx, state[live])
+        nxt[live] = nn
+        state[live] = ns
+    return np.concatenate(touched) if touched else np.zeros(0, np.int64)
+
+
+def reconcile(sym_a: CodedSymbols, sym_b: CodedSymbols, key=DEFAULT_KEY) -> PeelResult:
+    """Decode A △ B from equal-length symbol prefixes of A and B."""
+    return peel(sym_a.subtract(sym_b), key)

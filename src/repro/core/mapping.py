@@ -1,0 +1,172 @@
+"""The Rateless IBLT mapping (paper §4.1–4.2).
+
+A source symbol is mapped to coded-symbol index ``i`` with probability
+``ρ(i) = 1/(1 + αi)``, α = 0.5.  Every symbol maps to index 0 (ρ(0)=1).
+Subsequent mapped indices are produced by *skip sampling*: from index ``i``
+jump ``g = max(1, ⌈C⁻¹(r)⌉)`` with ``C⁻¹(r) ≈ (1.5+i)·((1−r)^{−1/2} − 1)``
+and ``r ∈ [0,1)`` drawn from an xorshift64 PRNG seeded by the symbol's keyed
+hash.  Constant cost per mapped index, O(log m) mapped indices in the first
+``m`` — the property that gives Rateless IBLT its O(ℓ·log d) costs.
+
+Determinism contract: the host (numpy) and device (JAX uint32-pair) chains
+produce *identical* index sequences.  All real arithmetic is float32 with an
+identical op sequence on both paths (no FMA-fusable patterns), so IEEE-754
+guarantees bit-equal results.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import jax.numpy as jnp
+
+from .hashing import map_key, siphash24, siphash24_pair
+
+ALPHA = 0.5
+
+_U64 = np.uint64
+
+
+def rho(i):
+    """Mapping probability ρ(i) = 1/(1 + αi)."""
+    return 1.0 / (1.0 + ALPHA * np.asarray(i, dtype=np.float64))
+
+
+def expected_degree(m: int) -> float:
+    """E[#mapped indices among the first m] = Σ_{i<m} ρ(i)."""
+    i = np.arange(m, dtype=np.float64)
+    return float(np.sum(1.0 / (1.0 + ALPHA * i)))
+
+
+def kmax(m: int) -> int:
+    """Static bound on mapped-index count within the first m coded symbols.
+
+    The count is a sum of independent Bernoulli(ρ(i)) with mean μ ≈ 2·ln m;
+    a Bernstein tail at μ + 8√μ + 10 is ≪ 1e-12.  Used by the fixed-shape
+    device encoder; the host encoder walks exact chains and never truncates.
+    """
+    mu = 2.0 * math.log(m + 2.0)
+    return int(math.ceil(mu + 8.0 * math.sqrt(mu) + 10.0))
+
+
+# ---------------------------------------------------------------------------
+# PRNG: xorshift64 seeded with the keyed 64-bit item hash (forced nonzero).
+# ---------------------------------------------------------------------------
+def _xs64_np(s: np.ndarray) -> np.ndarray:
+    s = s ^ (s << _U64(13))
+    s = s ^ (s >> _U64(7))
+    s = s ^ (s << _U64(17))
+    return s
+
+
+def map_seeds(words: np.ndarray, key, nbytes: int | None = None) -> np.ndarray:
+    """Per-item mapping-PRNG seed (uint64, nonzero) from the session key."""
+    s = siphash24(words, map_key(key), nbytes)
+    return s | _U64(1)
+
+
+def _jump_np(idx: np.ndarray, state: np.ndarray):
+    """One skip-sampling step (vectorized).  idx int64, state uint64."""
+    state = _xs64_np(state)
+    rbits = (state >> _U64(40)).astype(np.float32)        # top 24 bits
+    r = rbits * np.float32(2.0 ** -24)                    # uniform [0,1)
+    t = np.float32(1.0) / np.sqrt(np.float32(1.0) - r)    # (1-r)^(-1/2)
+    u = t - np.float32(1.0)
+    f = np.float32(1.5) + idx.astype(np.float32)
+    g = np.ceil(f * u).astype(np.int64)
+    g = np.maximum(g, 1)
+    return idx + g, state
+
+
+def advance_np(idx, state, limit):
+    """Advance chains until every idx >= limit.  Yields (active_sel, idx)
+    batches for the encoder.  idx/state are modified in place."""
+    while True:
+        active = np.flatnonzero(idx < limit)
+        if active.size == 0:
+            return
+        yield active, idx[active]
+        nidx, nstate = _jump_np(idx[active], state[active])
+        idx[active] = nidx
+        state[active] = nstate
+
+
+def item_indices_np(seed: int, m: int) -> np.ndarray:
+    """All mapped indices < m for one item (exact chain).  int64 array."""
+    out = []
+    idx = np.zeros(1, dtype=np.int64)
+    state = np.array([seed], dtype=np.uint64)
+    while idx[0] < m:
+        out.append(int(idx[0]))
+        idx, state = _jump_np(idx, state)
+    return np.asarray(out, dtype=np.int64)
+
+
+def indices_matrix_np(seeds: np.ndarray, m: int, K: int | None = None) -> np.ndarray:
+    """(n,) seeds -> (n, K) mapped indices < m, padded with m (vectorized)."""
+    if K is None:
+        K = kmax(m)
+    n = seeds.shape[0]
+    out = np.full((n, K), m, dtype=np.int64)
+    idx = np.zeros(n, dtype=np.int64)
+    state = seeds.astype(np.uint64).copy()
+    for k in range(K):
+        live = idx < m
+        out[live, k] = idx[live]
+        if not live.any():
+            break
+        idx, state = _jump_np(idx, state)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Device path (JAX): identical chain on (hi, lo) uint32 pairs.
+# ---------------------------------------------------------------------------
+def _xs64_pair(h, l):
+    # s ^= s << 13
+    nh = h ^ ((h << jnp.uint32(13)) | (l >> jnp.uint32(19)))
+    nl = l ^ (l << jnp.uint32(13))
+    h, l = nh, nl
+    # s ^= s >> 7
+    nh = h ^ (h >> jnp.uint32(7))
+    nl = l ^ ((l >> jnp.uint32(7)) | (h << jnp.uint32(25)))
+    h, l = nh, nl
+    # s ^= s << 17
+    nh = h ^ ((h << jnp.uint32(17)) | (l >> jnp.uint32(15)))
+    nl = l ^ (l << jnp.uint32(17))
+    return nh, nl
+
+
+def map_seeds_pair(words, key, nbytes: int | None = None):
+    hi, lo = siphash24_pair(words, map_key(key), nbytes)
+    return hi, lo | jnp.uint32(1)
+
+
+def _jump_j(idx, h, l):
+    """One skip-sampling step on device.  idx int32, (h, l) uint32 state."""
+    h, l = _xs64_pair(h, l)
+    rbits = (h >> jnp.uint32(8)).astype(jnp.float32)      # top 24 bits of u64
+    r = rbits * jnp.float32(2.0 ** -24)
+    t = jnp.float32(1.0) / jnp.sqrt(jnp.float32(1.0) - r)
+    u = t - jnp.float32(1.0)
+    f = jnp.float32(1.5) + idx.astype(jnp.float32)
+    g = jnp.ceil(f * u).astype(jnp.int32)
+    g = jnp.maximum(g, 1)
+    return idx + g, h, l
+
+
+def indices_matrix_j(seed_hi, seed_lo, m: int, K: int | None = None):
+    """Device chain: (n,) uint32 seeds -> (n, K) int32 indices, pad = m."""
+    if K is None:
+        K = kmax(m)
+    n = seed_hi.shape[0]
+    idx = jnp.zeros(n, dtype=jnp.int32)
+    h, l = seed_hi, seed_lo
+    cols = []
+    for _ in range(K):
+        cols.append(idx)
+        nidx, h, l = _jump_j(idx, h, l)
+        # saturate at m: stops the chain (and prevents int32 overflow of
+        # the ever-growing jump sizes once past the window).
+        idx = jnp.minimum(nidx, jnp.int32(m))
+    return jnp.stack(cols, axis=1)

@@ -1,0 +1,52 @@
+"""High-level Rateless IBLT API.
+
+    >>> from repro.core import Sketch, reconcile_sets
+    >>> a = Sketch.from_items(list_of_bytes_a, nbytes=32)
+    >>> b = Sketch.from_items(list_of_bytes_b, nbytes=32)
+    >>> only_a, only_b, m_used = reconcile_sets(a, b)
+
+`reconcile_sets` mimics the live protocol: stream A's symbols in growing
+blocks into a StreamDecoder holding B, stop at decode (symbol 0 empties).
+"""
+from __future__ import annotations
+
+from .decoder import PeelResult, peel
+from .encoder import Encoder
+from .hashing import DEFAULT_KEY, words_to_bytes
+from .stream import StreamDecoder
+from .symbols import CodedSymbols
+
+
+class Sketch(Encoder):
+    """An Encoder with convenience constructors/decoders."""
+
+    @classmethod
+    def from_items(cls, items, nbytes: int, key=DEFAULT_KEY) -> "Sketch":
+        s = cls(nbytes, key)
+        if len(items):
+            s.add_items(items)
+        return s
+
+    def decode_against(self, remote: CodedSymbols) -> PeelResult:
+        """Peel remote_prefix ⊖ local_prefix (same m)."""
+        return peel(remote.subtract(self.symbols(remote.m)), self.key)
+
+
+def reconcile_sets(a: Sketch, b: Sketch, block: int = 8, max_m: int = 1 << 22):
+    """Run the rateless protocol: A streams blocks until B decodes.
+
+    Returns (items_only_in_A bytes-array, items_only_in_B, symbols_used).
+    """
+    dec = StreamDecoder(b.nbytes, local=b, key=b.key)
+    m = 0
+    while m < max_m:
+        take = max(block, m)  # exponential-ish growth of block size
+        sym = a.symbols(m + take)
+        batch = CodedSymbols(sym.sums[m:], sym.checks[m:], sym.counts[m:],
+                             a.nbytes)
+        m += take
+        if dec.receive(batch):
+            only_a, only_b = dec.result()
+            return (words_to_bytes(only_a, a.nbytes),
+                    words_to_bytes(only_b, a.nbytes), dec.decoded_at)
+    raise RuntimeError("reconciliation did not converge within max_m symbols")

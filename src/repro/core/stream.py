@@ -1,0 +1,117 @@
+"""Incremental stream decoding (paper §4.1 protocol).
+
+Alice streams coded symbols; Bob subtracts his own (locally generated)
+symbols index-wise and peels as symbols arrive, terminating as soon as
+symbol 0 empties (ρ(0)=1 ⇒ it is decoded last).  Already-recovered items are
+XOR-ed out of newly arriving symbols by extending their mapping chains — the
+decoder mirror of the encoder's incrementality.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .encoder import Encoder, _xor_accumulate
+from .hashing import DEFAULT_KEY, siphash24
+from .mapping import _jump_np, map_seeds
+from .symbols import CodedSymbols
+
+
+class StreamDecoder:
+    """Decodes A △ B from an incrementally received prefix of A's stream.
+
+    ``local`` is Bob's encoder for his set B (its prefix is extended in lock
+    step and subtracted).  Pass ``local=None`` to decode a raw set stream.
+    """
+
+    def __init__(self, nbytes: int, local: Encoder | None = None,
+                 key=DEFAULT_KEY):
+        self.nbytes = nbytes
+        self.key = key
+        self.local = local
+        self.work = CodedSymbols.zeros(0, nbytes)
+        self.rec_items = np.zeros((0, (nbytes + 3) // 4), np.uint32)
+        self.rec_hashes = np.zeros(0, np.uint64)
+        self.rec_sides = np.zeros(0, np.int8)
+        # chain positions of recovered items at index == self.work.m
+        self._rnext = np.zeros(0, np.int64)
+        self._rstate = np.zeros(0, np.uint64)
+        self.symbols_received = 0
+        self.decoded_at: int | None = None  # symbols used at first decode
+
+    # ------------------------------------------------------------------
+    @property
+    def decoded(self) -> bool:
+        if self.work.m == 0:
+            return False
+        return bool(self.work.is_empty()[0])
+
+    def receive(self, sym: CodedSymbols) -> bool:
+        """Feed symbols [m, m+sym.m) of A's stream.  Returns `decoded`."""
+        old = self.work.m
+        if self.local is not None:
+            mine = self.local.symbols(old + sym.m)
+            loc = CodedSymbols(mine.sums[old:], mine.checks[old:],
+                               mine.counts[old:], self.nbytes)
+            sym = sym.subtract(loc)
+        self.work = self.work.concat(sym.copy())
+        self.symbols_received = self.work.m
+        m = self.work.m
+        # extend recovered items' chains through the new rows
+        self._walk(self.rec_items, self.rec_hashes, self.rec_sides,
+                   self._rnext, self._rstate, m)
+        self._peel(np.arange(old, m, dtype=np.int64))
+        done = self.decoded
+        if done and self.decoded_at is None:
+            self.decoded_at = self.symbols_received
+        return done
+
+    # ------------------------------------------------------------------
+    def _walk(self, items, hashes, sides, nxt, state, hi):
+        touched = []
+        while True:
+            live = np.flatnonzero(nxt < hi)
+            if live.size == 0:
+                return np.concatenate(touched) if touched else np.zeros(0, np.int64)
+            idx = nxt[live]
+            touched.append(idx.copy())
+            _xor_accumulate(self.work.sums, self.work.checks, self.work.counts,
+                            idx, items[live], hashes[live],
+                            -sides[live].astype(np.int64))
+            nn, ns = _jump_np(idx, state[live])
+            nxt[live] = nn
+            state[live] = ns
+
+    def _peel(self, cand: np.ndarray) -> None:
+        m = self.work.m
+        while cand.size:
+            cand = np.unique(cand)
+            h = siphash24(self.work.sums[cand], self.key, self.nbytes)
+            pure = cand[(h == self.work.checks[cand]) &
+                        (self.work.counts[cand] != 0)]
+            if pure.size == 0:
+                return
+            items = self.work.sums[pure]
+            hashes = self.work.checks[pure]
+            sides = np.sign(self.work.counts[pure]).astype(np.int8)
+            _, first = np.unique(hashes, return_index=True)
+            items, hashes, sides = items[first], hashes[first], sides[first]
+            fresh = ~np.isin(hashes, self.rec_hashes)
+            items, hashes, sides = items[fresh], hashes[fresh], sides[fresh]
+            if items.shape[0] == 0:
+                return
+            n = items.shape[0]
+            nxt = np.zeros(n, np.int64)
+            state = map_seeds(items, self.key, self.nbytes).copy()
+            cand = self._walk(items, hashes, sides, nxt, state, m)
+            self.rec_items = np.concatenate([self.rec_items, items])
+            self.rec_hashes = np.concatenate([self.rec_hashes, hashes])
+            self.rec_sides = np.concatenate([self.rec_sides, sides])
+            self._rnext = np.concatenate([self._rnext, nxt])
+            self._rstate = np.concatenate([self._rstate, state])
+
+    # ------------------------------------------------------------------
+    def result(self):
+        """(items_exclusive_to_A, items_exclusive_to_B) as uint32 words."""
+        a = self.rec_items[self.rec_sides > 0]
+        b = self.rec_items[self.rec_sides < 0]
+        return a, b

@@ -1,0 +1,103 @@
+"""Wire encoding of coded-symbol streams (paper §6).
+
+The ``count`` field of the i-th coded symbol of a set of N items is
+concentrated around its expectation N·ρ(i); we transmit only the zig-zag
+varint of (count − round(N·ρ(i))), averaging ~1 byte/symbol.  ``sum`` and
+``checksum`` travel raw.  N rides with symbol 0.
+"""
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+from .mapping import rho
+from .symbols import CodedSymbols
+
+
+def _zigzag(v: np.ndarray) -> np.ndarray:
+    v = v.astype(np.int64)
+    return ((v << 1) ^ (v >> 63)).astype(np.uint64)
+
+
+def _unzigzag(u: np.ndarray) -> np.ndarray:
+    u = u.astype(np.uint64)
+    return ((u >> np.uint64(1)).astype(np.int64)) ^ -(u & np.uint64(1)).astype(np.int64)
+
+
+def _varint_encode(u: int) -> bytes:
+    out = bytearray()
+    while True:
+        b = u & 0x7F
+        u >>= 7
+        if u:
+            out.append(b | 0x80)
+        else:
+            out.append(b)
+            return bytes(out)
+
+
+def _varint_decode(buf: memoryview, pos: int):
+    shift = 0
+    val = 0
+    while True:
+        b = buf[pos]
+        pos += 1
+        val |= (b & 0x7F) << shift
+        if not b & 0x80:
+            return val, pos
+        shift += 7
+
+
+def expected_counts(n_items: int, start: int, stop: int) -> np.ndarray:
+    i = np.arange(start, stop, dtype=np.float64)
+    return np.rint(n_items * rho(i)).astype(np.int64)
+
+
+def varint_count_bytes(counts: np.ndarray, n_items: int | None = None,
+                       start: int = 0) -> int:
+    """Size in bytes of the varint-delta encoding of a count vector."""
+    counts = np.asarray(counts, dtype=np.int64)
+    if n_items is None:
+        n_items = int(abs(counts[0])) if counts.size else 0
+    exp = expected_counts(n_items, start, start + counts.size)
+    z = _zigzag(counts - exp)
+    nz = np.maximum(z, 1).astype(np.float64)
+    return int(np.sum(np.ceil(np.log2(nz + 1) / 7.0).clip(min=1)))
+
+
+def encode_stream(sym: CodedSymbols, start: int = 0,
+                  n_items: int | None = None) -> bytes:
+    """Serialize symbols [start, start+m) of a stream whose set has
+    ``n_items`` elements (defaults to |count of symbol 0| when start==0)."""
+    if n_items is None:
+        assert start == 0
+        n_items = int(abs(sym.counts[0])) if sym.m else 0
+    exp = expected_counts(n_items, start, start + sym.m)
+    deltas = _zigzag(sym.counts - exp)
+    head = struct.pack("<IIQ", sym.m, sym.nbytes, n_items)
+    body = bytearray(head)
+    raw_sums = np.ascontiguousarray(sym.sums).view(np.uint8).reshape(sym.m, -1)
+    for i in range(sym.m):
+        body += raw_sums[i, : 4 * sym.L].tobytes()[: 4 * sym.L]
+        body += struct.pack("<Q", int(sym.checks[i]))
+        body += _varint_encode(int(deltas[i]))
+    return bytes(body)
+
+
+def decode_stream(data: bytes, start: int = 0) -> tuple[CodedSymbols, int]:
+    """Inverse of :func:`encode_stream`.  Returns (symbols, n_items)."""
+    m, nbytes, n_items = struct.unpack_from("<IIQ", data, 0)
+    pos = 16
+    L = (nbytes + 3) // 4
+    sym = CodedSymbols.zeros(m, nbytes)
+    buf = memoryview(data)
+    exp = expected_counts(n_items, start, start + m)
+    for i in range(m):
+        sym.sums[i] = np.frombuffer(buf[pos:pos + 4 * L], dtype=np.uint32)
+        pos += 4 * L
+        sym.checks[i] = struct.unpack_from("<Q", data, pos)[0]
+        pos += 8
+        delta, pos = _varint_decode(buf, pos)
+        sym.counts[i] = _unzigzag(np.array([delta], dtype=np.uint64))[0] + exp[i]
+    return sym, n_items

@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: coded-symbol accumulation (the XOR hot loop).
+
+Part 2 of the encoder (paper §7.2 shows XOR-summing dominates compute).
+TPUs have no scatter-XOR, so the Go design (heap + pointer-chased XOR into
+one symbol at a time) is replaced by dense VPU work (DESIGN.md §3):
+
+  grid (m_blocks, n_blocks) — n innermost so each (BM, L) output tile stays
+  resident in VMEM while every item block streams past it once.  For item
+  block j and symbol tile i: build an equality mask between the block's
+  mapped indices (BN, K) and the tile's symbol iota (BM,), then XOR-reduce
+  masked items over the item axis with a log2(BN) halving tree.
+
+VMEM working set: items (BN·L) + idx (BN·K) + out tile (BM·(L+3)) words
+plus the transient masked product (BN·BM·L u32) that feeds the XOR tree —
+BN=256, BM=256, L=8 → ~2 MB transient, inside the ~16 MB v5e VMEM with
+double buffering.  BM is 128-aligned for lane-width friendliness; block
+sizes are tunable (see EXPERIMENTS.md §Perf for the sweep).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tree_xor(v):
+    """XOR-reduce axis 0 of (B, ...) — B a power of two — in log2(B) steps."""
+    b = v.shape[0]
+    while b > 1:
+        b //= 2
+        v = v[:b] ^ v[b:2 * b]
+    return v[0]
+
+
+def _kernel(items_ref, idx_ref, chk_ref, sums_ref, checks_ref, counts_ref,
+            *, K: int, block_m: int, m: int):
+    i = pl.program_id(0)   # symbol tile
+    j = pl.program_id(1)   # item block (innermost: accumulation)
+
+    @pl.when(j == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        checks_ref[...] = jnp.zeros_like(checks_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    items = items_ref[...]          # (BN, L) uint32
+    chks = chk_ref[...]             # (BN, 2) uint32
+    idxs = idx_ref[...]             # (BN, K) int32
+    bn, L = items.shape
+    base = i * block_m
+    lane = jax.lax.broadcasted_iota(jnp.int32, (bn, block_m), 1) + base
+
+    # The chain is strictly increasing, so an item maps to a given symbol at
+    # most once within its K slots: the (BN, K, BM) equality tensor reduces
+    # to a (BN, BM) mask with `any` — no loop over K, ~25 VPU ops total.
+    eq = (idxs[:, :, None] == lane[:, None, :]) & (idxs[:, :, None] < m)
+    mask = jnp.any(eq, axis=1)                         # (BN, BM)
+    mask_u = mask.astype(jnp.uint32)
+    counts_ref[...] = counts_ref[...] + \
+        jnp.sum(mask, axis=0, dtype=jnp.int32)[:, None]
+    sums_ref[...] = sums_ref[...] ^ \
+        _tree_xor(mask_u[:, :, None] * items[:, None, :])
+    checks_ref[...] = checks_ref[...] ^ \
+        _tree_xor(mask_u[:, :, None] * chks[:, None, :])
+
+
+def iblt_encode(items, idxs, chks, *, m: int, block_m: int = 256,
+                block_n: int = 256, interpret: bool = True):
+    """Accumulate coded symbols.
+
+    items (n, L) uint32, idxs (n, K) int32 (pad = m), chks (n, 2) uint32
+    -> (sums (m', L) uint32, checks (m', 2) uint32, counts (m', 1) int32)
+    with m' = m rounded up to block_m (ops.py trims).
+    """
+    n, L = items.shape
+    K = idxs.shape[1]
+    assert n % block_n == 0
+    mp = ((m + block_m - 1) // block_m) * block_m
+    grid = (mp // block_m, n // block_n)
+    kernel = functools.partial(_kernel, K=K, block_m=block_m, m=m)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_n, L), lambda i, j: (j, 0)),
+                  pl.BlockSpec((block_n, K), lambda i, j: (j, 0)),
+                  pl.BlockSpec((block_n, 2), lambda i, j: (j, 0))],
+        out_specs=[pl.BlockSpec((block_m, L), lambda i, j: (i, 0)),
+                   pl.BlockSpec((block_m, 2), lambda i, j: (i, 0)),
+                   pl.BlockSpec((block_m, 1), lambda i, j: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((mp, L), jnp.uint32),
+                   jax.ShapeDtypeStruct((mp, 2), jnp.uint32),
+                   jax.ShapeDtypeStruct((mp, 1), jnp.int32)],
+        interpret=interpret,
+    )(items, idxs, chks)

@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: per-item keyed hash + mapped-index chain.
+
+The paper's encoder hot loop has two parts; this kernel is part 1: for a
+block of items compute (a) the SipHash-2-4 checksum, (b) the mapping-PRNG
+seed, and (c) the first K skip-sampled mapped indices (§4.2).  Everything is
+elementwise over the item lane — shifts, u32 adds, one rsqrt per jump — pure
+VPU work with zero cross-lane traffic, which is why the chain generator is a
+lane-parallel kernel rather than the Go heap (see DESIGN.md §3).
+
+Layout: items (n, L) uint32 in VMEM blocks of (BN, L); outputs idx (n, K)
+int32, checksum (n, 2) uint32 (hi, lo).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.hashing import map_key, siphash24_pair
+from repro.core.mapping import _jump_j
+
+
+def _kernel(items_ref, idx_ref, chk_ref, *, K: int, m: int, nbytes: int,
+            key, mkey):
+    items = items_ref[...]                       # (BN, L) uint32
+    chk_hi, chk_lo = siphash24_pair(items, key, nbytes)
+    seed_hi, seed_lo = siphash24_pair(items, mkey, nbytes)
+    seed_lo = seed_lo | jnp.uint32(1)            # nonzero xorshift state
+    chk_ref[...] = jnp.stack([chk_hi, chk_lo], axis=1)
+    idx = jnp.zeros(items.shape[0], dtype=jnp.int32)
+    h, l = seed_hi, seed_lo
+    cols = []
+    for _ in range(K):
+        cols.append(idx)
+        nidx, h, l = _jump_j(idx, h, l)
+        idx = jnp.minimum(nidx, jnp.int32(m))    # saturate; stop overflow
+    # single full-block store (per-column ref stores serialize badly)
+    idx_ref[...] = jnp.stack(cols, axis=1)
+
+
+def map_indices(items, *, K: int, m: int, nbytes: int, key,
+                block_n: int = 256, interpret: bool = True):
+    """items (n, L) uint32 -> (idx (n, K) int32, checksum (n, 2) uint32).
+
+    n must be a multiple of block_n (ops.py pads).  ``interpret=True`` runs
+    the kernel body op-by-op on CPU (this container) — do not wrap it in
+    jit there: XLA-compiling the interpreter's unrolled store sequence takes
+    minutes.  On TPU pass interpret=False and jit the caller.
+    """
+    n, L = items.shape
+    assert n % block_n == 0, (n, block_n)
+    grid = (n // block_n,)
+    kernel = functools.partial(_kernel, K=K, m=m, nbytes=nbytes, key=key,
+                               mkey=map_key(key))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_n, L), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((block_n, K), lambda i: (i, 0)),
+                   pl.BlockSpec((block_n, 2), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n, K), jnp.int32),
+                   jax.ShapeDtypeStruct((n, 2), jnp.uint32)],
+        interpret=interpret,
+    )(items)

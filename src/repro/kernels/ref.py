@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the Pallas kernels (no Pallas, no tricks).
+
+XOR-scatter has no native jnp primitive, so the oracle goes through bit
+parity: unpack words to bits, segment-sum by target index, mod 2, repack.
+Slow but obviously correct; every kernel test compares against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import map_key, siphash24_pair
+from repro.core.mapping import _jump_j
+
+
+def map_indices_ref(items, *, K: int, m: int, nbytes: int, key):
+    chk_hi, chk_lo = siphash24_pair(items, key, nbytes)
+    seed_hi, seed_lo = siphash24_pair(items, map_key(key), nbytes)
+    seed_lo = seed_lo | jnp.uint32(1)
+    idx = jnp.zeros(items.shape[0], dtype=jnp.int32)
+    h, l = seed_hi, seed_lo
+    cols = []
+    for _ in range(K):
+        cols.append(idx)
+        nidx, h, l = _jump_j(idx, h, l)
+        idx = jnp.minimum(nidx, jnp.int32(m))
+    return jnp.stack(cols, axis=1), jnp.stack([chk_hi, chk_lo], axis=1)
+
+
+def _unpack_bits(x):
+    """(n, W) uint32 -> (n, W*32) int32 of 0/1."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (x[..., None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(x.shape[0], -1).astype(jnp.int32)
+
+
+def _pack_bits(b, W):
+    """(m, W*32) int32 0/1 -> (m, W) uint32."""
+    b = b.reshape(b.shape[0], W, 32).astype(jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(b << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def iblt_encode_ref(items, idxs, chks, *, m: int):
+    """XOR-scatter via bit-parity segment sums."""
+    n, L = items.shape
+    K = idxs.shape[1]
+    flat = idxs.reshape(-1)
+    valid = (flat < m).astype(jnp.int32)
+    rep_items = jnp.repeat(items, K, axis=0)
+    rep_chks = jnp.repeat(chks, K, axis=0)
+    tgt = jnp.where(flat < m, flat, m)
+    bits_i = _unpack_bits(rep_items) * valid[:, None]
+    bits_c = _unpack_bits(rep_chks) * valid[:, None]
+    seg_i = jax.ops.segment_sum(bits_i, tgt, num_segments=m + 1)[:m]
+    seg_c = jax.ops.segment_sum(bits_c, tgt, num_segments=m + 1)[:m]
+    counts = jax.ops.segment_sum(valid, tgt, num_segments=m + 1)[:m]
+    sums = _pack_bits(seg_i % 2, L)
+    checks = _pack_bits(seg_c % 2, 2)
+    return sums, checks, counts[:, None]

@@ -1,0 +1,221 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import (device count locks at first init).
+"""Multi-pod dry-run: lower + compile every (arch × shape) on the
+production meshes, and extract the roofline raw terms from the compiled
+artifact (memory analysis, cost analysis, collective bytes from HLO).
+
+  python -m repro.launch.dryrun --arch yi-9b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all            # every cell, both meshes
+  python -m repro.launch.dryrun --all --mesh multipod
+
+Results land in out/dryrun/<arch>__<shape>__<mesh>.json (cached; delete to
+re-run).  --all orchestrates one subprocess per cell so a pathological cell
+cannot poison the rest (and compile memory is returned to the OS).
+"""
+import argparse
+import dataclasses
+import json
+import re
+import subprocess
+import sys
+import time
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "out", "dryrun")
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in (post-SPMD) HLO text."""
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    # e.g.:  %all-reduce.5 = bf16[2048,7168]{1,0} all-reduce(...)
+    pat = re.compile(
+        r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^)=]*?\s("
+        + "|".join(_COLLECTIVES) + r")\(")
+    for m in pat.finditer(hlo_text):
+        dt, dims, kind = m.group(1), m.group(2), m.group(3)
+        if dt == "tuple":
+            continue
+        nbytes = _DTYPE_BYTES.get(dt, 4)
+        numel = 1
+        for d in dims.split(","):
+            if d:
+                numel *= int(d)
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += numel * nbytes
+    # tuple-shaped collectives: "= (bf16[..], bf16[..]) all-reduce("
+    pat2 = re.compile(r"=\s*\(([^)]*)\)[^=]*?\s("
+                      + "|".join(_COLLECTIVES) + r")\(")
+    for m in pat2.finditer(hlo_text):
+        kind = m.group(2)
+        total = 0
+        for dt, dims in re.findall(r"([a-z0-9]+)\[([0-9,]*)\]", m.group(1)):
+            nbytes = _DTYPE_BYTES.get(dt, 4)
+            numel = 1
+            for d in dims.split(","):
+                if d:
+                    numel *= int(d)
+            total += numel * nbytes
+        if total:
+            out[kind]["count"] += 1
+            out[kind]["bytes"] += total
+    return out
+
+
+def abstract_init(model, key):
+    """(param ShapeDtypeStructs, param PartitionSpecs) without allocating."""
+    import jax
+    holder = []
+
+    def run(k):
+        p, s = model.init(k)
+        holder.append(s)
+        return p
+
+    shapes = jax.eval_shape(run, key)
+    return shapes, holder[0]
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool):
+    """Returns (fn, in_shapes, in_shardings, out_shardings)."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import get_config, get_shape
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import build_model, input_specs
+    from repro.train.loop import make_opt_config, make_train_step
+    from repro.train.optim import init_state, state_specs
+
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg, mesh)
+    ns = lambda spec_tree: jax.tree.map(
+        lambda sp: NamedSharding(mesh, sp), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+    key = jax.random.key(0)
+    p_shapes, p_specs = abstract_init(model, key)
+    batch_shapes, batch_pspecs = input_specs(cfg, shape, mesh)
+
+    if shape.kind == "train":
+        opt_cfg = make_opt_config(cfg)
+        o_shapes = jax.eval_shape(lambda p: init_state(opt_cfg, p), p_shapes)
+        o_specs = state_specs(opt_cfg, p_specs)
+        step = make_train_step(model, opt_cfg,
+                               microbatches=cfg.microbatches)
+        in_shardings = (ns(p_specs), ns(o_specs), ns(batch_pspecs))
+        out_shardings = (ns(p_specs), ns(o_specs), None)
+        args = (p_shapes, o_shapes, batch_shapes)
+        fn = step
+    elif shape.kind == "prefill":
+        fn = model.prefill
+        in_shardings = (ns(p_specs), ns(batch_pspecs))
+        out_shardings = None
+        args = (p_shapes, batch_shapes)
+    else:  # decode
+        def fn(params, tokens, caches, pos):
+            return model.decode_step(params, tokens, caches, pos)
+        cache_pspecs = batch_pspecs["caches"]
+        in_shardings = (ns(p_specs), ns(batch_pspecs["tokens"]),
+                        ns(cache_pspecs), ns(batch_pspecs["pos"]))
+        out_shardings = (None, ns(cache_pspecs))
+        args = (p_shapes, batch_shapes["tokens"], batch_shapes["caches"],
+                batch_shapes["pos"])
+    return fn, args, in_shardings, out_shardings, mesh
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str) -> dict:
+    import jax
+    multi_pod = mesh_name == "multipod"
+    t0 = time.time()
+    fn, args, in_sh, out_sh, mesh = build_cell(arch, shape_name, multi_pod)
+    jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+    lowered = jitted.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    text = compiled.as_text()
+    coll = parse_collectives(text)
+
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "devices": int(mesh.devices.size),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops_per_device": float(cost.get("flops", -1)) if cost else -1,
+        "bytes_per_device": float(cost.get("bytes accessed", -1))
+        if cost else -1,
+        "memory": {
+            k: int(getattr(mem, k, -1)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "alias_size_in_bytes",
+             "generated_code_size_in_bytes")
+        } if mem is not None else {},
+        "collectives": coll,
+        "hlo_bytes": len(text),
+    }
+    print(json.dumps({k: v for k, v in result.items() if k != "collectives"},
+                     indent=None), flush=True)
+    print("collectives:", json.dumps(coll), flush=True)
+    print("memory_analysis:", result["memory"], flush=True)
+    return result
+
+
+def cell_path(arch, shape, mesh_name):
+    return os.path.join(OUT_DIR, f"{arch}__{shape}__{mesh_name}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--timeout", type=int, default=3000,
+                    help="per-cell subprocess timeout (s) in --all mode")
+    args = ap.parse_args()
+    os.makedirs(OUT_DIR, exist_ok=True)
+
+    if args.all:
+        from repro.configs import cells
+        todo = [(a, s, args.mesh) for a, s, _ in cells()]
+        failures = []
+        for a, s, m in todo:
+            path = cell_path(a, s, m)
+            if os.path.exists(path) and not args.force:
+                print(f"[cached] {a} {s} {m}", flush=True)
+                continue
+            print(f"[run] {a} {s} {m}", flush=True)
+            proc = subprocess.run(
+                [sys.executable, "-m", "repro.launch.dryrun", "--arch", a,
+                 "--shape", s, "--mesh", m],
+                capture_output=True, text=True, timeout=args.timeout,
+                env={**os.environ, "PYTHONPATH":
+                     os.environ.get("PYTHONPATH", "src")})
+            if proc.returncode != 0:
+                failures.append((a, s, m))
+                print(f"[FAIL] {a} {s} {m}\n{proc.stdout[-2000:]}"
+                      f"\n{proc.stderr[-2000:]}", flush=True)
+        print(f"done; {len(failures)} failures: {failures}", flush=True)
+        sys.exit(1 if failures else 0)
+
+    result = run_cell(args.arch, args.shape, args.mesh)
+    with open(cell_path(args.arch, args.shape, args.mesh), "w") as f:
+        json.dump(result, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

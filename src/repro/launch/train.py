@@ -1,0 +1,115 @@
+"""End-to-end training driver with checkpoint/restart fault tolerance and
+Rateless-IBLT state repair.
+
+    python -m repro.launch.train --arch yi-9b --smoke --steps 50
+    python -m repro.launch.train --arch yi-9b --smoke --steps 50 \
+        --fail-at 20 --peer-dir /ckpts/healthy   # crash + IBLT repair demo
+
+Recovery path on start: restore local checkpoint -> verify chunk digests ->
+if stale/corrupt and a peer is configured, reconcile only the differing
+chunks from the peer (repro.checkpoint.reconcile) -> resume at the stored
+step with deterministic data skip-ahead (straggler/replacement workers
+resume mid-epoch without replaying samples).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def synthetic_batch(cfg, step, batch, seq):
+    """Deterministic data pipeline with O(1) skip-ahead: batch t is a pure
+    function of (arch, t), so a restarted worker resumes exactly."""
+    import jax
+    import jax.numpy as jnp
+    key = jax.random.fold_in(jax.random.key(hash(cfg.name) % 2**31), step)
+    toks = jax.random.randint(key, (batch, seq + 1), 0, cfg.vocab)
+    out = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    if cfg.frontend == "vision_stub":
+        out["patches"] = jnp.zeros((batch, cfg.n_patches, cfg.d_model),
+                                   jnp.float32)
+    if cfg.frontend == "audio_stub":
+        out["frames"] = jnp.zeros((batch, cfg.encoder_frames, cfg.d_model),
+                                  jnp.float32)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-9b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="out/train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--fail-at", type=int, default=0,
+                    help="simulate a crash after this step (exit 17)")
+    ap.add_argument("--peer-dir", default=None,
+                    help="healthy peer checkpoint dir for IBLT repair")
+    args = ap.parse_args()
+
+    import jax
+    from repro.checkpoint.manager import CheckpointStore
+    from repro.configs import get_config, smoke_config
+    from repro.launch.mesh import make_local_mesh
+    from repro.models import build_model
+    from repro.train.loop import (init_train_state, make_opt_config,
+                                  make_train_step)
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mesh = make_local_mesh()
+    model = build_model(cfg, mesh)
+    opt_cfg = make_opt_config(cfg, total_steps=args.steps)
+    params, opt_state, _ = init_train_state(model, opt_cfg, jax.random.key(0))
+    store = CheckpointStore(args.ckpt_dir)
+
+    # ---- recovery -----------------------------------------------------
+    start = 0
+    man = store.manifest()
+    if man is not None:
+        bad = store.verify()
+        if bad and args.peer_dir:
+            print(f"[recover] {len(bad)} corrupt chunks; reconciling from "
+                  "peer via Rateless IBLT", flush=True)
+            from repro.checkpoint.reconcile import PeerEndpoint, sync_from_peer
+            peer = PeerEndpoint(CheckpointStore(args.peer_dir))
+            rep = sync_from_peer(store, peer)
+            print(f"[recover] fetched {rep.chunks_fetched} chunks, "
+                  f"{rep.total_bytes/1e6:.2f} MB vs naive "
+                  f"{rep.naive_bytes/1e6:.2f} MB "
+                  f"({rep.savings:.1f}x saved)", flush=True)
+        elif bad:
+            raise SystemExit(f"corrupt checkpoint, no peer: {bad[:4]}")
+        struct = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+            {"params": params, "opt": opt_state})
+        state = store.restore(struct)
+        params, opt_state = state["params"], state["opt"]
+        start = int(store.manifest()["step"])
+        print(f"[recover] resumed from step {start}", flush=True)
+
+    step_fn = jax.jit(make_train_step(model, opt_cfg))
+    t0 = time.time()
+    for t in range(start, args.steps):
+        batch = synthetic_batch(cfg, t, args.batch, args.seq)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if t % 10 == 0 or t == args.steps - 1:
+            print(f"step {t} loss {float(metrics['loss']):.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"({(time.time()-t0):.1f}s)", flush=True)
+        if args.ckpt_every and (t + 1) % args.ckpt_every == 0:
+            store.save(t + 1, {"params": jax.device_get(params),
+                               "opt": jax.device_get(opt_state)})
+            print(f"[ckpt] step {t+1}", flush=True)
+        if args.fail_at and t + 1 == args.fail_at:
+            print("[failure-injection] simulating crash", flush=True)
+            raise SystemExit(17)
+    print("done", flush=True)
+
+
+if __name__ == "__main__":
+    main()

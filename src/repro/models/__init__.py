@@ -1,0 +1,3 @@
+from .model import build_model, input_specs, mesh_axes_of
+
+__all__ = ["build_model", "input_specs", "mesh_axes_of"]

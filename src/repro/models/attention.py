@@ -1,0 +1,244 @@
+"""GQA attention: global/local (sliding window), causal train/prefill paths
+and a KV-cache decode step; optional qk-norm; cross-attention for enc-dec.
+
+KV heads shard over "model" only when divisible by the axis size; otherwise
+K/V are computed replicated across model shards (cheap: kv·dh ≪ d) while Q
+heads stay model-sharded — the standard GQA/MQA compromise.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .layers import _init, apply_rope, init_rmsnorm, rmsnorm
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg, dtype, fsdp: bool, model_axis: int = 16):
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    row = "data" if fsdp else None
+    kv_shard = "model" if kv % model_axis == 0 else None
+    p = {"wq": _init(k1, (d, h * dh), dtype=dtype),
+         "wk": _init(k2, (d, kv * dh), dtype=dtype),
+         "wv": _init(k3, (d, kv * dh), dtype=dtype),
+         "wo": _init(k4, (h * dh, d), dtype=dtype)}
+    s = {"wq": P(row, "model"), "wk": P(row, kv_shard),
+         "wv": P(row, kv_shard), "wo": P("model", row)}
+    if cfg.qk_norm:
+        p["q_norm"], s["q_norm"] = init_rmsnorm(dh, dtype)
+        p["k_norm"], s["k_norm"] = init_rmsnorm(dh, dtype)
+    return p, s
+
+
+def _qkv(x, p, cfg, positions):
+    B, S, _ = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, h, dh)
+    k = (x @ p["wk"]).reshape(B, S, kv, dh)
+    v = (x @ p["wv"]).reshape(B, S, kv, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, n_rep):
+    """q: (B,S,H,Dh), k/v: (B,T,KV,Dh); mask: (S,T) or (B,S,T) additive."""
+    B, S, H, Dh = q.shape
+    T = k.shape[1]
+    KV = k.shape[2]
+    q = q.reshape(B, S, KV, n_rep, Dh)
+    scores = jnp.einsum("bsgrd,btgd->bgrst", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(Dh).astype(jnp.float32)
+    scores = scores + mask[..., None, None, :, :] if mask.ndim == 2 else \
+        scores + mask[:, None, None]
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bgrst,btgd->bsgrd", w, v)
+    return out.reshape(B, S, H, Dh)
+
+
+def causal_mask(S, T, window: int = 0, offset: int = 0):
+    """(S, T) additive mask; rows are query positions offset..offset+S-1."""
+    qpos = jnp.arange(S) + offset
+    kpos = jnp.arange(T)
+    ok = kpos[None, :] <= qpos[:, None]
+    if window:
+        ok &= kpos[None, :] > qpos[:, None] - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _sdpa_flash(q, k, v, n_rep, window: int = 0,
+                qblock: int = 512, kblock: int = 1024, mesh_axes=None):
+    """Causal attention with nested KV-block scan + online softmax.
+
+    O(S·kblock) live scores instead of O(S²) — the memory-roofline fix for
+    the 4k-train / 32k-prefill cells (see EXPERIMENTS.md §Perf: the naive
+    path is kept behind REPRO_ATTN=naive as the recorded "before").
+
+    Both scan bodies are jax.checkpoint-ed so AD saves only the O(S·Dh)
+    per-step carries instead of every block's (qb,kb) score matrix, and the
+    block tensors carry explicit sharding constraints (batch over the data
+    axes, heads over "model" when divisible) so GSPMD cannot drop the batch
+    sharding inside the loops.  q: (B,S,H,Dh), k/v: (B,T,KV,Dh).
+    """
+    B, S, H, Dh = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    qb = min(qblock, S)
+    kb = min(kblock, T)
+    nq, nk = S // qb, T // kb
+    scale = 1.0 / jnp.sqrt(Dh).astype(jnp.float32)
+
+    def constrain(x, spec):
+        if mesh_axes is None:
+            return x
+        from jax.sharding import NamedSharding
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh_axes["mesh"], spec))
+
+    if mesh_axes is not None:
+        da = mesh_axes["data"]
+        msz = mesh_axes["model_size"]
+        kv_shard = "model" if KV % msz == 0 else None
+        blk_spec = P(None, da, kv_shard, None, None, None)  # stacked q blocks
+        kv_spec = P(None, da, kv_shard, None, None)
+    # (nq, B, KV, R, qb, Dh) / (nk, B, KV, kb, Dh)
+    qr = q.reshape(B, nq, qb, KV, n_rep, Dh).transpose(1, 0, 3, 4, 2, 5)
+    kr = k.reshape(B, nk, kb, KV, Dh).transpose(1, 0, 3, 2, 4)
+    vr = v.reshape(B, nk, kb, KV, Dh).transpose(1, 0, 3, 2, 4)
+    if mesh_axes is not None:
+        qr = constrain(qr, blk_spec)
+        kr = constrain(kr, kv_spec)
+        vr = constrain(vr, kv_spec)
+
+    def k_step(carry, ki):
+        m, l, acc, qblk, qidx = carry
+        kblk, vblk, kidx = ki
+        s = jnp.einsum("bgrqd,bgkd->bgrqk", qblk.astype(jnp.float32),
+                       kblk.astype(jnp.float32)) * scale
+        qpos = qidx * qb + jnp.arange(qb)
+        kpos = kidx * kb + jnp.arange(kb)
+        ok = kpos[None, :] <= qpos[:, None]
+        if window:
+            ok &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(ok[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bgrqk,bgkd->bgrqd", p, vblk.astype(jnp.float32))
+        return (m_new, l, acc, qblk, qidx), None
+
+    k_step = jax.checkpoint(k_step)
+
+    def q_step(_, qi):
+        qblk, qidx = qi                       # (B,KV,R,qb,Dh), scalar idx
+        m0 = jnp.full((B, KV, n_rep, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, n_rep, qb), jnp.float32)
+        a0 = jnp.zeros((B, KV, n_rep, qb, Dh), jnp.float32)
+        (m, l, acc, _, _), _ = jax.lax.scan(
+            k_step, (m0, l0, a0, qblk, qidx),
+            (kr, vr, jnp.arange(nk)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        if mesh_axes is not None:
+            out = constrain(out, P(mesh_axes["data"], kv_shard, None,
+                                   None, None))
+        return None, out
+
+    q_step = jax.checkpoint(q_step)
+    _, outs = jax.lax.scan(q_step, None, (qr, jnp.arange(nq)))
+    # outs: (nq, B, KV, R, qb, Dh) -> (B, S, H, Dh)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, KV, n_rep, Dh)
+    return out.reshape(B, S, H, Dh).astype(q.dtype)
+
+
+def attention(x, p, cfg, window: int = 0, return_kv: bool = False,
+              mesh_axes=None):
+    """Causal self-attention over a full sequence (train / prefill).
+
+    With return_kv, also returns the decode cache: full (B,S,KV,Dh) for
+    global blocks; for windowed blocks a rolling buffer of the last
+    `window` positions placed at slot = position %% window.
+    """
+    import os
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _qkv(x, p, cfg, positions)
+    if os.environ.get("REPRO_ATTN") == "naive" or S <= 512:
+        mask = causal_mask(S, S, window)
+        out = _sdpa(q, k, v, mask, cfg.n_heads // cfg.n_kv_heads)
+    else:
+        out = _sdpa_flash(q, k, v, cfg.n_heads // cfg.n_kv_heads,
+                          window=window, mesh_axes=mesh_axes)
+    y = out.reshape(B, S, -1) @ p["wo"]
+    if not return_kv:
+        return y
+    if window and window < S:
+        w = window
+        ck = jnp.roll(k[:, -w:], shift=S % w, axis=1)
+        cv = jnp.roll(v[:, -w:], shift=S % w, axis=1)
+    else:
+        ck, cv = k, v
+    return y, ck, cv
+
+
+def attention_decode(x, p, cfg, cache_k, cache_v, pos, window: int = 0):
+    """One-token decode against a KV cache.
+
+    x: (B, 1, D); cache_k/v: (B, S_max, KV, Dh) — for windowed blocks the
+    cache is a rolling buffer of size `window` written at pos % window.
+    pos: (B,) current absolute position.
+    Returns (out (B,1,D), cache_k, cache_v).
+    """
+    B = x.shape[0]
+    S_max = cache_k.shape[1]
+    q, k, v = _qkv(x, p, cfg, pos[:, None])
+    slot = pos % S_max if window else pos            # (B,)
+    bidx = jnp.arange(B)
+    cache_k = cache_k.at[bidx, slot].set(k[:, 0])
+    cache_v = cache_v.at[bidx, slot].set(v[:, 0])
+    kpos = jnp.arange(S_max)[None, :]
+    if window:
+        # rolling buffer: slot j holds absolute position pos - ((pos-j) mod S_max)
+        age = (pos[:, None] - kpos) % S_max
+        ok = age < jnp.minimum(pos[:, None] + 1, window)
+    else:
+        ok = kpos <= pos[:, None]
+    mask = jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)  # (B, S_max)
+    out = _sdpa(q, cache_k, cache_v, mask[:, None, :],
+                cfg.n_heads // cfg.n_kv_heads)
+    return out.reshape(B, 1, -1) @ p["wo"], cache_k, cache_v
+
+
+# -------------------------------------------------------- cross-attention
+def init_cross_attention(key, cfg, dtype, fsdp: bool, model_axis: int = 16):
+    return init_attention(key, cfg, dtype, fsdp, model_axis)
+
+
+def cross_attention(x, p, cfg, enc_k, enc_v):
+    """x: (B, S, D) queries; enc_k/v precomputed (B, T, KV, Dh)."""
+    B, S, _ = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, h, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+    T = enc_k.shape[1]
+    mask = jnp.zeros((S, T), jnp.float32)
+    out = _sdpa(q, enc_k, enc_v, mask, cfg.n_heads // cfg.n_kv_heads)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def encode_kv(enc_out, p, cfg):
+    """Precompute cross-attention K/V from encoder output."""
+    B, T, _ = enc_out.shape
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+    k = (enc_out @ p["wk"]).reshape(B, T, kv, dh)
+    v = (enc_out @ p["wv"]).reshape(B, T, kv, dh)
+    if cfg.qk_norm:
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    return k, v

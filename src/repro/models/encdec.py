@@ -1,0 +1,189 @@
+"""Encoder–decoder assembly (whisper-family).
+
+The audio frontend is a stub per the assignment: input_specs() provides
+precomputed frame embeddings (B, frames, d_model).  Encoder blocks are
+bidirectional; decoder blocks are causal self-attention + cross-attention +
+MLP.  Norm/positional flavor is standardized to the zoo's RMSNorm+RoPE
+(dims are faithful; see DESIGN.md §7 notes).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import attention as att
+from .layers import (embed_lookup, init_embed, init_mlp, init_rmsnorm, mlp,
+                     rmsnorm, unembed)
+
+
+def _init_enc_block(key, cfg, dtype, fsdp, ma):
+    k1, k2 = jax.random.split(key)
+    p, s = {}, {}
+    p["ln1"], s["ln1"] = init_rmsnorm(cfg.d_model, dtype)
+    p["attn"], s["attn"] = att.init_attention(k1, cfg, dtype, fsdp, ma)
+    p["ln2"], s["ln2"] = init_rmsnorm(cfg.d_model, dtype)
+    p["ffn"], s["ffn"] = init_mlp(k2, cfg.d_model, cfg.d_ff, dtype, fsdp)
+    return p, s
+
+
+def _init_dec_block(key, cfg, dtype, fsdp, ma):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p, s = _init_enc_block(key, cfg, dtype, fsdp, ma)
+    p["ln_c"], s["ln_c"] = init_rmsnorm(cfg.d_model, dtype)
+    p["cross"], s["cross"] = att.init_cross_attention(k3, cfg, dtype, fsdp, ma)
+    return p, s
+
+
+def _enc_block(x, p, cfg):
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    B, S, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    from .attention import _qkv, _sdpa
+    q, k, v = _qkv(h, p["attn"], cfg, positions)
+    mask = jnp.zeros((S, S), jnp.float32)  # bidirectional
+    o = _sdpa(q, k, v, mask, cfg.n_heads // cfg.n_kv_heads)
+    x = x + o.reshape(B, S, -1) @ p["attn"]["wo"]
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    return x + mlp(h, p["ffn"])
+
+
+def _dec_block(x, p, cfg, enc_kv, mesh_axes=None):
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    o, ck, cv = att.attention(h, p["attn"], cfg, return_kv=True,
+                              mesh_axes=mesh_axes)
+    x = x + o
+    h = rmsnorm(x, p["ln_c"], cfg.norm_eps)
+    x = x + att.cross_attention(h, p["cross"], cfg, *enc_kv)
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    return x + mlp(h, p["ffn"]), {"k": ck, "v": cv}
+
+
+def _dec_block_step(x, p, cfg, cache, pos):
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    o, ck, cv = att.attention_decode(h, p["attn"], cfg, cache["k"],
+                                     cache["v"], pos)
+    x = x + o
+    h = rmsnorm(x, p["ln_c"], cfg.norm_eps)
+    x = x + att.cross_attention(h, p["cross"], cfg, cache["xk"], cache["xv"])
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    nc = dict(cache)
+    nc.update(k=ck, v=cv)
+    return x + mlp(h, p["ffn"]), nc
+
+
+class EncDecModel:
+    """Whisper-style: stub audio frames -> encoder -> causal decoder."""
+
+    def __init__(self, cfg, mesh_axes):
+        self.cfg = cfg
+        self.mesh_axes = mesh_axes
+
+    def _mask(self, lg):
+        if self.cfg.padded_vocab != self.cfg.vocab:
+            return jnp.where(jnp.arange(lg.shape[-1]) < self.cfg.vocab,
+                             lg, -1e30)
+        return lg
+
+    def init(self, key):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        ma = self.mesh_axes["model_size"]
+        ks = jax.random.split(key, 4)
+        p, s = {}, {}
+        p["embed"], s["embed"] = init_embed(ks[0], cfg.padded_vocab,
+                                            cfg.d_model, dtype, cfg.fsdp)
+        p["ln_f"], s["ln_f"] = init_rmsnorm(cfg.d_model, dtype)
+
+        def stack(key, init_fn, n):
+            ps, ss = [], None
+            for i in range(n):
+                bp, bs = init_fn(jax.random.fold_in(key, i), cfg, dtype,
+                                 cfg.fsdp, ma)
+                ps.append(bp)
+                ss = bs
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+            specs = jax.tree.map(lambda sp: P(*((None,) + tuple(sp))), ss,
+                                 is_leaf=lambda x: isinstance(x, P))
+            return stacked, specs
+
+        p["enc"], s["enc"] = stack(ks[1], _init_enc_block,
+                                   cfg.encoder_layers or cfg.n_layers)
+        p["dec"], s["dec"] = stack(ks[2], _init_dec_block, cfg.n_layers)
+        return p, s
+
+    def encode(self, params, frames):
+        cfg = self.cfg
+        x = frames.astype(jnp.dtype(cfg.dtype))
+
+        def body(x, lp):
+            fn = _enc_block
+            if cfg.remat:
+                fn = jax.checkpoint(fn, static_argnums=(2,))
+            return fn(x, lp, cfg), None
+
+        x, _ = jax.lax.scan(lambda c, lp: body(c, lp), x, params["enc"])
+        return x
+
+    def _dec_stack(self, params, x, enc_out):
+        cfg = self.cfg
+
+        mesh_axes = self.mesh_axes
+
+        def body(x, lp):
+            kv = att.encode_kv(enc_out, lp["cross"], cfg)
+            fn = lambda x_, lp_, kv_: _dec_block(x_, lp_, cfg, kv_, mesh_axes)
+            if cfg.remat:
+                fn = jax.checkpoint(fn)
+            x, cache = fn(x, lp, kv)
+            cache.update(xk=kv[0], xv=kv[1])
+            return x, cache
+
+        x, caches = jax.lax.scan(body, x, params["dec"])
+        return rmsnorm(x, params["ln_f"], cfg.norm_eps), caches
+
+    def loss(self, params, batch):
+        enc_out = self.encode(params, batch["frames"])
+        x = embed_lookup(params["embed"], batch["tokens"])
+        x, _ = self._dec_stack(params, x, enc_out)
+        logits = self._mask(unembed(x, params["embed"]))
+        from .transformer import shard_aware_ce
+        ce = shard_aware_ce(logits, batch["labels"], self.mesh_axes)
+        return ce, {"ce": ce, "aux": 0.0}
+
+    def prefill(self, params, batch):
+        enc_out = self.encode(params, batch["frames"])
+        x = embed_lookup(params["embed"], batch["tokens"])
+        x, caches = self._dec_stack(params, x, enc_out)
+        logits = self._mask(unembed(x[:, -1:], params["embed"]))
+        return logits, caches
+
+    def decode_step(self, params, tokens, caches, pos):
+        cfg = self.cfg
+        x = embed_lookup(params["embed"], tokens)
+
+        def body(x, xs):
+            lp, cache = xs
+            x, nc = _dec_block_step(x, lp, cfg, cache, pos)
+            return x, nc
+
+        x, ncaches = jax.lax.scan(body, x, (params["dec"], caches))
+        x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        return self._mask(unembed(x, params["embed"])), ncaches
+
+    def cache_spec(self, B, S_ctx):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        data_axes = self.mesh_axes["data"] if \
+            B % self.mesh_axes["data_size"] == 0 else None
+        msz = self.mesh_axes["model_size"]
+        dh, kv = cfg.head_dim, cfg.n_kv_heads
+        dh_shard = "model" if dh % msz == 0 else None
+        L = cfg.n_layers
+        F = cfg.encoder_frames
+        mk = lambda shp: jax.ShapeDtypeStruct((L,) + shp, dtype)
+        sp = lambda: P(None, data_axes, None, None, dh_shard)
+        struct = {"k": mk((B, S_ctx, kv, dh)), "v": mk((B, S_ctx, kv, dh)),
+                  "xk": mk((B, F, kv, dh)), "xv": mk((B, F, kv, dh))}
+        specs = {"k": sp(), "v": sp(), "xk": sp(), "xv": sp()}
+        return struct, specs

@@ -1,0 +1,92 @@
+"""Shared layers: norms, embeddings, RoPE, gated MLP.
+
+Functional style: params are nested dicts of jnp arrays; each init_* returns
+(params, specs) where specs mirrors params with jax.sharding.PartitionSpec
+leaves (see sharding/rules.py for the axis conventions).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+def _init(key, shape, scale=None, dtype=jnp.float32):
+    scale = scale if scale is not None else 1.0 / np.sqrt(shape[0])
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- norms --
+def init_rmsnorm(d, dtype):
+    return jnp.ones((d,), dtype), P(None)
+
+
+def rmsnorm(x, w, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(d, dtype):
+    p = {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+    s = {"w": P(None), "b": P(None)}
+    return p, s
+
+
+def layernorm(x, p, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * p["w"].astype(jnp.float32) +
+            p["b"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ----------------------------------------------------------- embeddings --
+def init_embed(key, vocab, d, dtype, fsdp: bool):
+    emb = _init(key, (vocab, d), scale=0.02, dtype=dtype)
+    return emb, P("model", "data" if fsdp else None)
+
+
+def embed_lookup(emb, tokens):
+    return jnp.take(emb, tokens, axis=0)
+
+
+def unembed(x, emb):
+    """Tied unembedding: (B, S, D) x (V, D)^T -> fp32 logits."""
+    return jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32),
+                      emb.astype(jnp.float32))
+
+
+# ----------------------------------------------------------------- RoPE --
+def rope_frequencies(d_head, theta):
+    return 1.0 / (theta ** (np.arange(0, d_head, 2) / d_head))
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., S, H, Dh), positions: (..., S)."""
+    d_head = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(d_head, theta), jnp.float32)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------ gated MLP --
+def init_mlp(key, d, d_ff, dtype, fsdp: bool):
+    k1, k2, k3 = jax.random.split(key, 3)
+    row = "data" if fsdp else None
+    p = {"wi": _init(k1, (d, d_ff), dtype=dtype),
+         "wg": _init(k2, (d, d_ff), dtype=dtype),
+         "wo": _init(k3, (d_ff, d), dtype=dtype)}
+    s = {"wi": P(row, "model"), "wg": P(row, "model"), "wo": P("model", row)}
+    return p, s
+
+
+def mlp(x, p):
+    h = jax.nn.silu(x @ p["wi"]) * (x @ p["wg"])
+    return h @ p["wo"]

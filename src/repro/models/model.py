@@ -1,0 +1,76 @@
+"""Facade: build a model + abstract input specs for any (arch, shape)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .encdec import EncDecModel
+from .transformer import Model
+
+
+def mesh_axes_of(mesh):
+    """Mesh metadata dict used across model code.
+
+    data axes = all batch-parallel axes (("pod","data") on the multi-pod
+    mesh); "model" is the tensor axis."""
+    names = mesh.axis_names
+    sizes = dict(zip(names, mesh.devices.shape))
+    data = tuple(n for n in names if n != "model")
+    data_size = 1
+    for n in data:
+        data_size *= sizes[n]
+    data = data[0] if len(data) == 1 else data
+    return {"mesh": mesh, "data": data, "model": "model",
+            "model_size": sizes["model"], "data_size": data_size}
+
+
+def build_model(cfg, mesh):
+    axes = mesh_axes_of(mesh)
+    if cfg.family == "encdec":
+        return EncDecModel(cfg, axes)
+    return Model(cfg, axes)
+
+
+def input_specs(cfg, shape, mesh):
+    """ShapeDtypeStructs + PartitionSpecs for every model input of a cell.
+
+    train  -> {tokens, labels} (+frames/patches)
+    prefill-> {tokens} (+frames/patches)
+    decode -> {tokens (B,1), pos (B,)} + KV/state caches
+    """
+    axes = mesh_axes_of(mesh)
+    B, S = shape.global_batch, shape.seq_len
+    # replicate batch when it cannot shard (e.g. long_500k's B=1)
+    data_axes = axes["data"] if B % axes["data_size"] == 0 else None
+    tok = lambda s: jax.ShapeDtypeStruct(s, jnp.int32)
+    f32 = lambda s: jax.ShapeDtypeStruct(s, jnp.bfloat16)
+    batch_spec = P(data_axes, None)
+
+    if shape.kind in ("train", "prefill"):
+        S_text = S
+        specs, pspecs = {}, {}
+        if cfg.frontend == "vision_stub":
+            S_text = S - cfg.n_patches
+            specs["patches"] = f32((B, cfg.n_patches, cfg.d_model))
+            pspecs["patches"] = P(data_axes, None, None)
+        if cfg.frontend == "audio_stub":
+            specs["frames"] = f32((B, cfg.encoder_frames, cfg.d_model))
+            pspecs["frames"] = P(data_axes, None, None)
+        specs["tokens"] = tok((B, S_text))
+        pspecs["tokens"] = batch_spec
+        if shape.kind == "train":
+            specs["labels"] = tok((B, S_text))
+            pspecs["labels"] = batch_spec
+        return specs, pspecs
+
+    # decode: one new token against an S-long context
+    model = build_model(cfg, mesh)
+    cache_struct, cache_specs = model.cache_spec(B, S)
+    specs = {"tokens": tok((B, 1)), "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+             "caches": cache_struct}
+    pspecs = {"tokens": batch_spec, "pos": P(data_axes),
+              "caches": cache_specs}
+    if cfg.frontend == "audio_stub":
+        pass  # cross-attention K/V already inside the cache pytree
+    return specs, pspecs

@@ -1,0 +1,90 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+    r_t = σ(x_t W_r),  i_t = σ(x_t W_i)
+    a_t = exp(-c · softplus(Λ) · r_t)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x̃_t)
+
+The block is a "recurrent block": conv1d(width 4) front, RG-LRU core, gated
+output — following the Griffin paper.  The linear recurrence is diagonal, so
+training/prefill uses jax.lax.associative_scan (parallel, GEMM-free but
+HLO-visible); decode carries (h, conv window) state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .layers import _init
+
+C_CONST = 8.0
+CONV_W = 4
+
+
+def init_rglru(key, cfg, dtype, fsdp: bool):
+    d = cfg.d_model
+    dr = cfg.d_rnn or d
+    ks = jax.random.split(key, 6)
+    row = "data" if fsdp else None
+    p = {"w_in": _init(ks[0], (d, dr), dtype=dtype),
+         "w_gate": _init(ks[1], (d, dr), dtype=dtype),
+         "conv": _init(ks[2], (CONV_W, dr), scale=0.5, dtype=dtype),
+         "w_r": _init(ks[3], (dr, dr), dtype=dtype),
+         "w_i": _init(ks[4], (dr, dr), dtype=dtype),
+         "lam": jnp.ones((dr,), jnp.float32) * 0.7,
+         "w_out": _init(ks[5], (dr, d), dtype=dtype)}
+    s = {"w_in": P(row, "model"), "w_gate": P(row, "model"),
+         "conv": P(None, "model"), "w_r": P(None, "model"),
+         "w_i": P(None, "model"), "lam": P("model"),
+         "w_out": P("model", row)}
+    return p, s
+
+
+def _conv1d(x, w, carry):
+    """Causal depthwise conv, width CONV_W.  x: (B,S,dr); carry: (B,W-1,dr)."""
+    full = jnp.concatenate([carry, x], axis=1)
+    out = sum(full[:, i:i + x.shape[1]] * w[i] for i in range(CONV_W))
+    return out, full[:, -(CONV_W - 1):]
+
+
+def _gates(xc, p):
+    r = jax.nn.sigmoid(xc @ p["w_r"])
+    i = jax.nn.sigmoid(xc @ p["w_i"])
+    log_a = (-C_CONST * jax.nn.softplus(p["lam"].astype(jnp.float32)) *
+             r.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = (jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) *
+             (i * xc).astype(jnp.float32))
+    return a, gated
+
+
+def rglru_block(x, p, cfg, conv_carry, h0):
+    """x: (B,S,d).  Returns (out, conv_carry, h_last)."""
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    xin = x @ p["w_in"]
+    xc, conv_carry = _conv1d(xin, p["conv"], conv_carry)
+    a, gated = _gates(xc, p)
+
+    # h_t = a_t h_{t-1} + b_t  via associative scan on (a, b) pairs
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_seq = jnp.concatenate([h0[:, None] * 0 + 1.0, a], axis=1)
+    b_seq = jnp.concatenate([h0[:, None].astype(jnp.float32), gated], axis=1)
+    _, h = jax.lax.associative_scan(combine, (a_seq, b_seq), axis=1)
+    h = h[:, 1:]
+    out = (h.astype(x.dtype) * gate) @ p["w_out"]
+    return out, conv_carry, h[:, -1]
+
+
+def rglru_decode(x, p, cfg, conv_carry, h):
+    """One-token step.  x: (B,1,d); h: (B,dr)."""
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    xin = x @ p["w_in"]
+    xc, conv_carry = _conv1d(xin, p["conv"], conv_carry)
+    a, gated = _gates(xc, p)
+    h = a[:, 0] * h + gated[:, 0]
+    out = (h[:, None].astype(x.dtype) * gate) @ p["w_out"]
+    return out, conv_carry, h

@@ -1,0 +1,389 @@
+"""Model assembly: decoder-only / enc-dec / hybrid stacks with a uniform
+facade (init, loss, prefill, decode_step) used by the trainer, the serving
+engine and the dry-run.
+
+Depth is organized as repeated *periods* of cfg.block_pattern (e.g.
+("rglru","rglru","local") for RecurrentGemma); parameters of each period
+are stacked over the period count and the stack is traversed with
+jax.lax.scan (+ optional jax.checkpoint) so the compiled HLO stays
+one-period-sized regardless of depth — essential for 61/88-layer dry-runs.
+Leftover layers (depth % period) run unrolled as the "tail".
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import attention as att
+from . import moe as moe_mod
+from . import rglru as rg
+from . import rwkv6 as rwkv
+from .layers import (embed_lookup, init_embed, init_mlp, init_rmsnorm, mlp,
+                     rmsnorm, unembed, _init)
+
+
+def shard_aware_ce(logits, labels, mesh_axes):
+    """Cross entropy that keeps the (B,S,V) logits sharded over "model".
+
+    take_along_axis over a sharded vocab axis makes GSPMD all-gather the
+    full fp32 logits (tens of GB at 4k×256 batch); instead constrain the
+    sharding explicitly and select the gold logit with an iota compare —
+    both the logsumexp reduction and the masked select then lower to a
+    per-shard reduce + small psum.  labels < 0 are masked."""
+    from jax.sharding import NamedSharding
+    mesh = mesh_axes["mesh"]
+    spec = P(mesh_axes["data"], None, "model")
+    logits = jax.lax.with_sharding_constraint(
+        logits, NamedSharding(mesh, spec))
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jnp.arange(logits.shape[-1])
+    sel = vocab_iota[None, None, :] == labels[..., None]
+    gold = jnp.sum(jnp.where(sel, logits, 0.0), axis=-1)
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum((lse - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# --------------------------------------------------------------- blocks --
+def init_block(key, kind, cfg, dtype, fsdp, model_axis):
+    """One sub-block's params+specs: pre-norms + mixer (+ffn)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    p, s = {}, {}
+    p["ln1"], s["ln1"] = init_rmsnorm(cfg.d_model, dtype)
+    if kind in ("attn", "local"):
+        p["attn"], s["attn"] = att.init_attention(k1, cfg, dtype, fsdp,
+                                                  model_axis)
+    elif kind == "wkv":
+        p["attn"], s["attn"] = rwkv.init_rwkv(k1, cfg, dtype, fsdp)
+    elif kind == "rglru":
+        p["attn"], s["attn"] = rg.init_rglru(k1, cfg, dtype, fsdp)
+    else:
+        raise ValueError(kind)
+    p["ln2"], s["ln2"] = init_rmsnorm(cfg.d_model, dtype)
+    if kind == "wkv":
+        p["ffn"], s["ffn"] = rwkv.init_rwkv_ffn(k2, cfg, dtype, fsdp)
+    elif cfg.n_experts:
+        p["ffn"], s["ffn"] = moe_mod.init_moe(k2, cfg, dtype, fsdp)
+    else:
+        p["ffn"], s["ffn"] = init_mlp(k2, cfg.d_model, cfg.d_ff, dtype, fsdp)
+    return p, s
+
+
+def block_cache_spec(kind, cfg, B, S_ctx, dtype, data_axes, model_axis_size):
+    """Decode-state ShapeDtypeStructs (+ pspecs) for one sub-block.
+
+    KV caches shard batch over the data axes and head_dim over "model"
+    (every assigned arch has head_dim % 16 == 0; GQA kv-head counts are
+    not divisible by the model axis, head_dim is) — decode then psums the
+    (tiny) per-token score partials instead of replicating the cache."""
+    dh, kv, h = cfg.head_dim, cfg.n_kv_heads, cfg.n_heads
+    dr = cfg.d_rnn or cfg.d_model
+    dh_shard = "model" if dh % model_axis_size == 0 else None
+    if kind in ("attn", "local"):
+        w = S_ctx if kind == "attn" else min(cfg.window or S_ctx, S_ctx)
+        shp = (B, w, kv, dh)
+        return ({"k": jax.ShapeDtypeStruct(shp, dtype),
+                 "v": jax.ShapeDtypeStruct(shp, dtype)},
+                {"k": P(data_axes, None, None, dh_shard),
+                 "v": P(data_axes, None, None, dh_shard)})
+    if kind == "wkv":
+        return ({"state": jax.ShapeDtypeStruct((B, h, dh, dh), jnp.float32),
+                 "shift_a": jax.ShapeDtypeStruct((B, cfg.d_model), dtype),
+                 "shift_f": jax.ShapeDtypeStruct((B, cfg.d_model), dtype)},
+                {"state": P(data_axes, "model", None, None),
+                 "shift_a": P(data_axes, None),
+                 "shift_f": P(data_axes, None)})
+    if kind == "rglru":
+        return ({"h": jax.ShapeDtypeStruct((B, dr), jnp.float32),
+                 "conv": jax.ShapeDtypeStruct((B, rg.CONV_W - 1, dr), dtype)},
+                {"h": P(data_axes, "model"),
+                 "conv": P(data_axes, None, "model")})
+    raise ValueError(kind)
+
+
+def block_forward(x, p, kind, cfg, mesh_axes, state=None):
+    """Full-sequence pass.  Returns (x_out, new_state, aux_loss)."""
+    aux = 0.0
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    new_state = {}
+    if kind in ("attn", "local"):
+        window = cfg.window if kind == "local" else 0
+        o, ck, cv = att.attention(h, p["attn"], cfg, window=window,
+                                  return_kv=True, mesh_axes=mesh_axes)
+        new_state.update(k=ck, v=cv)  # DCE'd when the caller drops states
+    elif kind == "wkv":
+        st = state or {}
+        B = x.shape[0]
+        shift = st.get("shift_a", jnp.zeros((B, cfg.d_model), x.dtype))
+        s0 = st.get("state", jnp.zeros((B, cfg.n_heads, cfg.head_dim,
+                                        cfg.head_dim), jnp.float32))
+        o, shift_out, s_new = rwkv.rwkv_block(h, p["attn"], cfg, shift, s0)
+        new_state.update(state=s_new, shift_a=shift_out)
+    elif kind == "rglru":
+        st = state or {}
+        B = x.shape[0]
+        dr = cfg.d_rnn or cfg.d_model
+        conv = st.get("conv", jnp.zeros((B, rg.CONV_W - 1, dr), x.dtype))
+        h0 = st.get("h", jnp.zeros((B, dr), jnp.float32))
+        o, conv, hl = rg.rglru_block(h, p["attn"], cfg, conv, h0)
+        new_state.update(h=hl, conv=conv)
+    x = x + o
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if kind == "wkv":
+        B = x.shape[0]
+        shift = (state or {}).get("shift_f",
+                                  jnp.zeros((B, cfg.d_model), x.dtype))
+        o, shift_out = rwkv.rwkv_ffn(h, p["ffn"], shift)
+        new_state["shift_f"] = shift_out
+    elif cfg.n_experts:
+        o, aux = moe_mod.moe_ffn(h, p["ffn"], cfg, mesh_axes)
+    else:
+        o = mlp(h, p["ffn"])
+    return x + o, new_state, aux
+
+
+def block_decode(x, p, kind, cfg, mesh_axes, cache, pos):
+    """One-token step.  Returns (x_out, new_cache)."""
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    nc = dict(cache)
+    if kind in ("attn", "local"):
+        window = cfg.window if kind == "local" else 0
+        o, ck, cv = att.attention_decode(h, p["attn"], cfg, cache["k"],
+                                         cache["v"], pos, window=window)
+        nc.update(k=ck, v=cv)
+    elif kind == "wkv":
+        o, shift, st = rwkv.rwkv_decode(h, p["attn"], cfg, cache["shift_a"],
+                                        cache["state"])
+        nc.update(state=st, shift_a=shift)
+    elif kind == "rglru":
+        o, conv, hh = rg.rglru_decode(h, p["attn"], cfg, cache["conv"],
+                                      cache["h"])
+        nc.update(conv=conv, h=hh)
+    x = x + o
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if kind == "wkv":
+        o, shift = rwkv.rwkv_ffn(h, p["ffn"], cache["shift_f"])
+        nc["shift_f"] = shift
+    elif cfg.n_experts:
+        o, _ = moe_mod.moe_ffn(h, p["ffn"], cfg, mesh_axes)
+    else:
+        o = mlp(h, p["ffn"])
+    return x + o, nc
+
+
+# ---------------------------------------------------------------- model --
+class Model:
+    """Decoder-only (incl. hybrid/ssm/moe/vlm) language model."""
+
+    def __init__(self, cfg, mesh_axes):
+        self.cfg = cfg
+        self.mesh_axes = mesh_axes
+        pattern = cfg.pattern()
+        period = len(cfg.block_pattern)
+        self.n_periods = len(pattern) // period
+        self.period_kinds = list(cfg.block_pattern)
+        self.tail_kinds = pattern[self.n_periods * period:]
+
+    # -- params ----------------------------------------------------------
+    def init(self, key):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        ma = self.mesh_axes["model_size"]
+        keys = jax.random.split(key, 4)
+        p, s = {}, {}
+        p["embed"], s["embed"] = init_embed(keys[0], cfg.padded_vocab,
+                                            cfg.d_model, dtype, cfg.fsdp)
+        if not self.cfg.tie_embeddings:
+            p["unembed"], s["unembed"] = init_embed(
+                keys[3], cfg.padded_vocab, cfg.d_model, dtype, cfg.fsdp)
+        p["ln_f"], s["ln_f"] = init_rmsnorm(cfg.d_model, dtype)
+
+        def stack_periods(key):
+            ps, ss = [], None
+            for i in range(self.n_periods):
+                kk = jax.random.split(jax.random.fold_in(key, i),
+                                      len(self.period_kinds))
+                bp, bs = zip(*[init_block(kk[j], kind, cfg, dtype, cfg.fsdp, ma)
+                               for j, kind in enumerate(self.period_kinds)])
+                ps.append(list(bp))
+                ss = list(bs)
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+            specs = jax.tree.map(
+                lambda sp: P(*((None,) + tuple(sp))), ss,
+                is_leaf=lambda x: isinstance(x, P))
+            return stacked, specs
+
+        p["periods"], s["periods"] = stack_periods(keys[1])
+        tail_p, tail_s = [], []
+        for i, kind in enumerate(self.tail_kinds):
+            bp, bs = init_block(jax.random.fold_in(keys[2], i), kind, cfg,
+                                dtype, cfg.fsdp, ma)
+            tail_p.append(bp)
+            tail_s.append(bs)
+        p["tail"], s["tail"] = tail_p, tail_s
+        return p, s
+
+    # -- forward ---------------------------------------------------------
+    def _embed_inputs(self, params, batch):
+        cfg = self.cfg
+        x = embed_lookup(params["embed"], batch["tokens"])
+        if cfg.frontend == "vision_stub" and "patches" in batch:
+            x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+        return x
+
+    def _sp_constrain(self, x):
+        """Sequence-parallel sharding for the inter-layer residual stream
+        (Megatron-SP): the scan-over-periods saves one carry per period for
+        the backward pass — L·B·S·d bf16 unsharded over "model" blows the
+        HBM budget (e.g. 24 GB for yi-9b train_4k); sharding S (or d) over
+        "model" turns that into L·B·S·d/16 with an all-gather at block
+        entry and a reduce-scatter at exit, the standard SP trade."""
+        ma = self.mesh_axes
+        msz = ma["model_size"]
+        B, S, d = x.shape
+        if S % msz == 0:
+            spec = P(ma["data"], "model", None)
+        elif d % msz == 0:
+            spec = P(ma["data"], None, "model")
+        else:
+            return x
+        from jax.sharding import NamedSharding
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(ma["mesh"], spec))
+
+    def _stack(self, params, x, states=None, collect_aux=False):
+        cfg = self.cfg
+        mesh_axes = self.mesh_axes
+        kinds = self.period_kinds
+
+        def period_fn(x, period_params, period_states):
+            aux = 0.0
+            new_states = []
+            for j, kind in enumerate(kinds):
+                st = period_states[j] if period_states is not None else None
+                x, ns, a = block_forward(x, period_params[j], kind, cfg,
+                                         mesh_axes, st)
+                aux = aux + a
+                new_states.append(ns)
+            return self._sp_constrain(x), new_states, aux
+
+        if cfg.remat:
+            period_fn = jax.checkpoint(period_fn)
+
+        def scan_body(carry, xs):
+            x = carry
+            pp, pst = xs
+            x, ns, aux = period_fn(x, pp, pst)
+            return x, (ns, aux)
+
+        pst = states["periods"] if states is not None else None
+        if pst is None:
+            empty = [
+                {} for _ in kinds]
+            pst_xs = None
+            x, (new_states, auxs) = jax.lax.scan(
+                lambda c, pp: scan_body(c, (pp, [None] * len(kinds))),
+                x, params["periods"])
+        else:
+            x, (new_states, auxs) = jax.lax.scan(scan_body, x,
+                                                 (params["periods"], pst))
+        aux_total = jnp.sum(auxs) if cfg.n_experts else 0.0
+        tail_states = []
+        for i, kind in enumerate(self.tail_kinds):
+            st = states["tail"][i] if states is not None else None
+            x, ns, a = block_forward(x, params["tail"][i], kind, cfg,
+                                     mesh_axes, st)
+            aux_total = aux_total + a
+            tail_states.append(ns)
+        x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        out_states = {"periods": new_states, "tail": tail_states}
+        return x, out_states, aux_total
+
+    def logits(self, params, x):
+        emb = params["embed"] if self.cfg.tie_embeddings else params["unembed"]
+        lg = unembed(x, emb)
+        if self.cfg.padded_vocab != self.cfg.vocab:  # mask padding rows
+            lg = jnp.where(jnp.arange(lg.shape[-1]) < self.cfg.vocab,
+                           lg, -1e30)
+        return lg
+
+    # -- public API --------------------------------------------------------
+    def loss(self, params, batch):
+        """Causal LM loss.  labels < 0 are masked."""
+        x = self._embed_inputs(params, batch)
+        x, _, aux = self._stack(params, x)
+        labels = batch["labels"]
+        if self.cfg.frontend == "vision_stub" and "patches" in batch:
+            npz = batch["patches"].shape[1]
+            pad = jnp.full(labels[:, :1].shape, -1, labels.dtype)
+            labels = jnp.concatenate(
+                [jnp.repeat(pad, npz, axis=1), labels], axis=1)
+        logits = self.logits(params, x)
+        ce = shard_aware_ce(logits, labels, self.mesh_axes)
+        return ce + 0.01 * aux, {"ce": ce, "aux": aux}
+
+    def prefill(self, params, batch):
+        """Full forward; returns (last-position logits, decode states).
+        KV caches for attn blocks are built by re-running projections is
+        wasteful; instead prefill returns hidden states per block via the
+        same pass (states carry recurrent blocks; attention caches are
+        filled by the serving engine's chunked prefill in serve/engine.py).
+        For the dry-run we lower this whole-sequence pass."""
+        x = self._embed_inputs(params, batch)
+        x, states, _ = self._stack(params, x)
+        return self.logits(params, x[:, -1:]), states
+
+    def decode_step(self, params, tokens, caches, pos):
+        """tokens (B,1), pos (B,) -> (logits (B,1,V), new caches)."""
+        cfg = self.cfg
+        x = embed_lookup(params["embed"], tokens)
+        kinds = self.period_kinds
+
+        def scan_body(carry, xs):
+            x = carry
+            pp, pc = xs
+            ncs = []
+            for j, kind in enumerate(kinds):
+                x, nc = block_decode(x, pp[j], kind, cfg, self.mesh_axes,
+                                     pc[j], pos)
+                ncs.append(nc)
+            return x, ncs
+
+        x, new_caches = jax.lax.scan(scan_body, x,
+                                     (params["periods"], caches["periods"]))
+        tail_caches = []
+        for i, kind in enumerate(self.tail_kinds):
+            x, nc = block_decode(x, params["tail"][i], kind, cfg,
+                                 self.mesh_axes, caches["tail"][i], pos)
+            tail_caches.append(nc)
+        x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        return self.logits(params, x), {"periods": new_caches,
+                                        "tail": tail_caches}
+
+    # -- specs -------------------------------------------------------------
+    def cache_spec(self, B, S_ctx):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        data_axes = self.mesh_axes["data"] if \
+            B % self.mesh_axes["data_size"] == 0 else None
+        msz = self.mesh_axes["model_size"]
+        per_kind = [block_cache_spec(k, cfg, B, S_ctx, dtype, data_axes, msz)
+                    for k in self.period_kinds]
+
+        def stack_struct(sd):
+            return jax.tree.map(
+                lambda t: jax.ShapeDtypeStruct((self.n_periods,) + t.shape,
+                                               t.dtype), sd)
+
+        def stack_spec(sp):
+            return jax.tree.map(lambda q: P(*((None,) + tuple(q))), sp,
+                                is_leaf=lambda x: isinstance(x, P))
+
+        periods_struct = [stack_struct(sd) for sd, _ in per_kind]
+        periods_spec = [stack_spec(sp) for _, sp in per_kind]
+        tail = [block_cache_spec(k, cfg, B, S_ctx, dtype, data_axes, msz)
+                for k in self.tail_kinds]
+        return ({"periods": periods_struct, "tail": [t[0] for t in tail]},
+                {"periods": periods_spec, "tail": [t[1] for t in tail]})

@@ -1,0 +1,75 @@
+"""Train step: loss + grad + optimizer update, with optional gradient
+accumulation and int8 error-feedback gradient compression for the cross-pod
+all-reduce (train/compression.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .optim import OptConfig, apply_updates, init_state
+
+
+def make_opt_config(cfg, total_steps: int = 10_000) -> OptConfig:
+    return OptConfig(kind=cfg.optimizer, state_dtype=cfg.opt_state_dtype,
+                     momentum=getattr(cfg, "adafactor_momentum", True),
+                     accum_dtype=getattr(cfg, "grad_accum_dtype", "float32"),
+                     total_steps=total_steps)
+
+
+def make_train_step(model, opt_cfg: OptConfig, microbatches: int = 1,
+                    compression=None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  With microbatches > 1 the global batch is split on the batch
+    axis and gradients are accumulated in fp32 (sequential lax.scan — the
+    pipeline-parallel path interleaves instead; see train/pipeline.py)."""
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single(params, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        return loss, metrics, grads
+
+    def accumulated(params, batch):
+        def split(x):
+            b = x.shape[0]
+            assert b % microbatches == 0, (b, microbatches)
+            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+        adt = jnp.dtype(opt_cfg.accum_dtype)
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, adt), params)
+
+        def body(acc, mb):
+            loss, metrics, grads = single(params, mb)
+            acc = jax.tree.map(lambda a, g: a + (g.astype(adt) /
+                               microbatches).astype(adt), acc, grads)
+            return acc, (loss, metrics)
+
+        grads, (losses, metricses) = jax.lax.scan(body, zero, micro)
+        metrics = jax.tree.map(lambda m: jnp.mean(m), metricses)
+        return jnp.mean(losses), metrics, grads
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            loss, metrics, grads = accumulated(params, batch)
+        else:
+            loss, metrics, grads = single(params, batch)
+        if compression is not None:
+            grads, opt_state = compression.apply(grads, opt_state)
+        params, opt_state, opt_metrics = apply_updates(
+            opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_train_state(model, opt_cfg: OptConfig, key):
+    params, specs = model.init(key)
+    opt_state = init_state(opt_cfg, params)
+    return params, opt_state, specs

@@ -1,0 +1,160 @@
+"""Optimizers: AdamW and Adafactor (factored second moment), with
+configurable state dtype — the 1T-param configs use factored v + bf16 m to
+fit 512 × 16 GB (see DESIGN.md §5).  States inherit parameter shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"            # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"
+    momentum: bool = True        # adafactor: disable to halve state bytes
+    accum_dtype: str = "float32"
+    warmup: int = 100
+    total_steps: int = 10_000
+
+
+def schedule(cfg: OptConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def _factored_dims(shape):
+    """Last two dims if both > 1 (Adafactor row/col factoring)."""
+    if len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1:
+        return len(shape) - 2, len(shape) - 1
+    return None
+
+
+def init_state(cfg: OptConfig, params):
+    dt = jnp.dtype(cfg.state_dtype)
+
+    def per_leaf(p):
+        if cfg.kind == "adamw":
+            return {"m": jnp.zeros_like(p, dtype=dt),
+                    "v": jnp.zeros_like(p, dtype=dt)}
+        fd = _factored_dims(p.shape)
+        if fd is None:
+            st = {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+        else:
+            r, c = fd
+            st = {"vr": jnp.zeros(p.shape[:c] + p.shape[c + 1:], jnp.float32),
+                  "vc": jnp.zeros(p.shape[:r] + p.shape[r + 1:], jnp.float32)}
+        if cfg.momentum:
+            st["m"] = jnp.zeros_like(p, dtype=dt)
+        return st
+
+    return {"step": jnp.zeros((), jnp.int32),
+            "opt": jax.tree.map(per_leaf, params)}
+
+
+def state_specs(cfg: OptConfig, param_specs):
+    """PartitionSpecs for the optimizer state, mirroring the params."""
+    from jax.sharding import PartitionSpec as P
+
+    def per_leaf(sp):
+        sp = sp if isinstance(sp, P) else P()
+        if cfg.kind == "adamw":
+            return {"m": sp, "v": sp}
+        # factored dims drop the last / second-to-last axes
+        t = tuple(sp)
+        if len(t) >= 2:
+            st = {"vr": P(*(t[:-2] + (t[-2],))), "vc": P(*(t[:-2] + (t[-1],)))}
+        else:
+            st = {"v": sp}
+        if cfg.momentum:
+            st["m"] = sp
+        return st
+
+    return {"step": P(),
+            "opt": jax.tree.map(per_leaf, param_specs,
+                                is_leaf=lambda x: isinstance(x, P))}
+
+
+# Leaves above this many elements get their fp32 optimizer math chunked
+# over the leading (stacked-layers) axis with lax.map: the transient fp32
+# copies of a 61-layer MoE weight stack would otherwise cost ~5 GB each.
+_CHUNK_ELEMS = 1 << 26
+
+
+def _global_norm(grads):
+    def leaf_sq(g):
+        if g.size > _CHUNK_ELEMS and g.ndim >= 2:
+            return jnp.sum(jax.lax.map(
+                lambda s: jnp.sum(jnp.square(s.astype(jnp.float32))), g))
+        return jnp.sum(jnp.square(g.astype(jnp.float32)))
+
+    return jnp.sqrt(sum(leaf_sq(g) for g in jax.tree.leaves(grads)))
+
+
+def apply_updates(cfg: OptConfig, params, grads, state):
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    gnorm = _global_norm(grads)
+    gscale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(path_p, p, g, st):
+        g = g.astype(jnp.float32) * gscale
+        if "m" in st:
+            m = st["m"].astype(jnp.float32) * cfg.b1 + g * (1 - cfg.b1)
+        else:
+            m, bc1_ = g, 1.0  # momentum-free adafactor
+        if "v" in st:
+            v = st["v"].astype(jnp.float32) * cfg.b2 + jnp.square(g) * (1 - cfg.b2)
+            upd_ = (m / (bc1 if "m" in st else 1.0)) / \
+                (jnp.sqrt(v / bc2) + cfg.eps)
+            new_st = dict(st, v=v.astype(st["v"].dtype))
+            if "m" in st:
+                new_st["m"] = m.astype(st["m"].dtype)
+        else:
+            # p shape (..., R, C): vr = mean over C -> (..., R); vc = mean
+            # over R -> (..., C); V ≈ vr ⊗ vc / mean(vr).
+            g2 = jnp.square(g) + 1e-30
+            vr = st["vr"] * cfg.b2 + jnp.mean(g2, axis=-1) * (1 - cfg.b2)
+            vc = st["vc"] * cfg.b2 + jnp.mean(g2, axis=-2) * (1 - cfg.b2)
+            vrb, vcb = vr / bc2, vc / bc2
+            denom = (vrb[..., :, None] * vcb[..., None, :] /
+                     jnp.maximum(jnp.mean(vrb, axis=-1)[..., None, None],
+                                 1e-30))
+            upd_ = (m / (bc1 if "m" in st else 1.0)) * \
+                jax.lax.rsqrt(denom + 1e-30)
+            new_st = dict(st, vr=vr, vc=vc)
+            if "m" in st:
+                new_st["m"] = m.astype(st["m"].dtype)
+        upd_ = upd_ + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * upd_).astype(p.dtype)
+        return new_p, new_st
+
+    def upd_leaf(p, g, st):
+        if p.size > _CHUNK_ELEMS and p.ndim >= 3:
+            # chunk the fp32 math over the stacked-layers axis; factored
+            # vr/vc drop trailing dims, so the leading axis lines up.
+            return jax.lax.map(lambda a: upd(None, *a), (p, g, st))
+        return upd(None, p, g, st)
+
+    flat_p, tree = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_s = tree.flatten_up_to(state["opt"])
+    out = [upd_leaf(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    new_params = tree.unflatten([o[0] for o in out])
+    new_opt = tree.unflatten([o[1] for o in out])
+    return new_params, {"step": step, "opt": new_opt}, \
+        {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,129 @@
+"""Checkpoint store + Rateless-IBLT state repair (the paper's technique as
+a first-class framework feature)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint.manager import CheckpointStore
+from repro.checkpoint.reconcile import PeerEndpoint, sync_from_peer
+
+
+def small_tree(key, scale=1.0):
+    k = jax.random.key(key)
+    return {
+        "layer0": {"w": jax.random.normal(k, (256, 300)) * scale,
+                   "b": jnp.zeros((300,))},
+        "layer1": {"w": jax.random.normal(jax.random.fold_in(k, 1),
+                                          (300, 128)) * scale},
+        "embed": jax.random.normal(jax.random.fold_in(k, 2), (1000, 64)),
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    store = CheckpointStore(str(tmp_path / "ckpt"))
+    tree = small_tree(0)
+    store.save(7, tree)
+    struct = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                          tree)
+    back = store.restore(struct)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert store.manifest()["step"] == 7
+    assert store.verify() == []
+
+
+def test_verify_detects_corruption(tmp_path):
+    store = CheckpointStore(str(tmp_path / "c"))
+    store.save(1, small_tree(0))
+    cid = next(iter(store.manifest()["chunks"]))
+    with open(store._chunk_path(cid), "r+b") as f:
+        f.seek(0)
+        f.write(b"\xff\xff\xff\xff")
+    bad = store.verify()
+    assert cid in bad and len(bad) == 1
+
+
+def test_reconcile_stale_replica(tmp_path):
+    """A replica holding an older checkpoint repairs to the latest by
+    fetching only the differing chunks, with symbol traffic ~ O(d)."""
+    fresh = CheckpointStore(str(tmp_path / "fresh"))
+    stale = CheckpointStore(str(tmp_path / "stale"))
+    base = small_tree(0)
+    stale.save(1, base)
+    # the fresh store advanced: one leaf changed entirely, rest identical
+    newer = dict(base)
+    newer["layer1"] = {"w": np.asarray(base["layer1"]["w"]) + 1.0}
+    fresh.save(2, newer)
+
+    peer = PeerEndpoint(fresh)
+    report = sync_from_peer(stale, peer)
+    assert report.chunks_fetched > 0
+    # repaired: manifests identical, all chunks verify
+    assert stale.manifest()["chunks"] == fresh.manifest()["chunks"]
+    assert stale.verify() == []
+    # and the restored tree equals the fresh one
+    struct = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                          newer)
+    got = stale.restore(struct)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(newer)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # communication: far below full re-download
+    assert report.total_bytes < report.naive_bytes / 2, report
+
+
+def test_reconcile_corrupt_chunk(tmp_path):
+    """Crash-corrupted chunks are detected by verify() and healed by
+    reconciliation (digest mismatch -> manifest divergence -> repair)."""
+    a = CheckpointStore(str(tmp_path / "a"))
+    b = CheckpointStore(str(tmp_path / "b"))
+    tree = small_tree(3)
+    a.save(5, tree)
+    b.save(5, tree)
+    cid = sorted(b.manifest()["chunks"])[1]
+    with open(b._chunk_path(cid), "wb") as f:
+        f.write(b"garbage")
+    # victim recomputes digests of suspect chunks into its manifest
+    bad = b.verify()
+    assert bad == [cid]
+    man = b.manifest()
+    import json, os
+    from repro.checkpoint.manager import _digest
+    name, idx = cid.rsplit("#", 1)
+    with open(b._chunk_path(cid), "rb") as f:
+        data = np.frombuffer(f.read(), np.uint8)
+    man["chunks"][cid] = _digest(name, int(idx), data)
+    with open(os.path.join(b.root, "manifest.json"), "w") as f:
+        json.dump(man, f)
+
+    report = sync_from_peer(b, PeerEndpoint(a))
+    assert report.chunks_fetched == 1
+    assert b.verify() == []
+
+
+def test_peer_incremental_symbol_update(tmp_path):
+    """Linearity: after the store changes, the peer updates its cached
+    symbol stream in place and new replicas still reconcile correctly."""
+    fresh = CheckpointStore(str(tmp_path / "f"))
+    tree = small_tree(1)
+    fresh.save(1, tree)
+    peer = PeerEndpoint(fresh)
+    _ = peer.symbols(0, 64)              # warm the universal cache
+    old_records = fresh.store_records if hasattr(fresh, "store_records") \
+        else fresh.records()
+    # store advances
+    tree2 = dict(tree)
+    tree2["embed"] = np.asarray(tree["embed"]) * 2.0
+    fresh.save(2, tree2)
+    new_records = fresh.records()
+    old_set = {r.tobytes() for r in old_records}
+    new_set = {r.tobytes() for r in new_records}
+    added = np.array([np.frombuffer(x, np.uint8) for x in new_set - old_set])
+    removed = np.array([np.frombuffer(x, np.uint8) for x in old_set - new_set])
+    peer.notify_update(added, removed)
+    # a stale replica (at step 1) now syncs against the UPDATED cache
+    stale = CheckpointStore(str(tmp_path / "s"))
+    stale.save(1, tree)
+    report = sync_from_peer(stale, peer)
+    assert stale.manifest()["chunks"] == fresh.manifest()["chunks"]
+    assert stale.verify() == []

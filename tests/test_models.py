@@ -1,0 +1,195 @@
+"""Per-architecture smoke tests (reduced same-family configs, CPU) and
+numerical consistency of the sequence-parallel forms vs step recurrences."""
+import warnings
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config, smoke_config
+from repro.models import build_model
+from repro.train.loop import init_train_state, make_opt_config, make_train_step
+
+warnings.filterwarnings("ignore", category=DeprecationWarning)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_batch(cfg, B=2, S=32, key=0):
+    k = jax.random.key(key)
+    batch = {"tokens": jax.random.randint(k, (B, S), 0, cfg.vocab),
+             "labels": jax.random.randint(k, (B, S), 0, cfg.vocab)}
+    if cfg.frontend == "vision_stub":
+        batch["patches"] = jnp.zeros((B, cfg.n_patches, cfg.d_model),
+                                     jnp.float32)
+    if cfg.frontend == "audio_stub":
+        batch["frames"] = jnp.zeros((B, cfg.encoder_frames, cfg.d_model),
+                                    jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch, mesh):
+    """One forward + one optimizer step on a reduced config: finite loss,
+    correct logits shape, params updated, still finite after the step."""
+    cfg = smoke_config(arch)
+    model = build_model(cfg, mesh)
+    opt_cfg = make_opt_config(cfg, total_steps=10)
+    params, opt_state, _ = init_train_state(model, opt_cfg, jax.random.key(0))
+    batch = make_batch(cfg)
+    loss, metrics = model.loss(params, batch)
+    assert np.isfinite(float(loss)), arch
+    step = make_train_step(model, opt_cfg)
+    p2, o2, m2 = step(params, opt_state, batch)
+    assert np.isfinite(float(m2["loss"]))
+    assert int(o2["step"]) == 1
+    # params actually moved
+    delta = max(float(jnp.max(jnp.abs(a.astype(jnp.float32) -
+                                      b.astype(jnp.float32))))
+                for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)))
+    assert delta > 0
+    # loss decreases over a few steps on a repeated batch (sanity, lenient)
+    p, o = p2, o2
+    first = float(m2["loss"])
+    for _ in range(3):
+        p, o, m = step(p, o, batch)
+    assert float(m["loss"]) < first * 1.5
+
+
+@pytest.mark.parametrize("arch", ["yi-9b", "rwkv6-1.6b", "recurrentgemma-2b",
+                                  "whisper-base"])
+def test_decode_matches_forward(arch, mesh):
+    """Teacher-forced decode logits == full-forward logits per position."""
+    cfg = smoke_config(arch)
+    model = build_model(cfg, mesh)
+    params, _ = model.init(jax.random.key(0))
+    B, S = 2, 16
+    batch = make_batch(cfg, B, S, key=3)
+    toks = batch["tokens"]
+    if cfg.family == "encdec":
+        full_logits, _ = _encdec_full(model, params, batch)
+    else:
+        x = model._embed_inputs(params, {"tokens": toks})
+        h, _, _ = model._stack(params, x)
+        full_logits = model.logits(params, h)
+    cache_struct, _ = model.cache_spec(B, S)
+    caches = jax.tree.map(lambda t: jnp.zeros(t.shape, t.dtype), cache_struct,
+                          is_leaf=lambda t: hasattr(t, "shape") and
+                          not isinstance(t, jnp.ndarray))
+    if cfg.family == "encdec":
+        enc_out = model.encode(params, batch["frames"])
+        from repro.models.attention import encode_kv
+        # fill cross K/V into the cache (serving engine does this at prefill)
+        xks, xvs = [], []
+        dec = params["dec"]
+        L = cfg.n_layers
+        for i in range(L):
+            lp = jax.tree.map(lambda a: a[i], dec)
+            k_, v_ = encode_kv(enc_out, lp["cross"], cfg)
+            xks.append(k_)
+            xvs.append(v_)
+        caches = dict(caches)
+        caches["xk"] = jnp.stack(xks)
+        caches["xv"] = jnp.stack(xvs)
+    errs = []
+    for t in range(S):
+        lg, caches = model.decode_step(params, toks[:, t:t + 1], caches,
+                                       jnp.full((B,), t, jnp.int32))
+        errs.append(float(jnp.max(jnp.abs(lg[:, 0] - full_logits[:, t]))))
+    assert max(errs) < 2e-4, (arch, max(errs))
+
+
+def _encdec_full(model, params, batch):
+    enc_out = model.encode(params, batch["frames"])
+    from repro.models.layers import embed_lookup, unembed, rmsnorm
+    x = embed_lookup(params["embed"], batch["tokens"])
+    x, caches = model._dec_stack(params, x, enc_out)
+    return unembed(x, params["embed"]), caches
+
+
+def test_moe_ep_equals_tp_without_drops(mesh):
+    import dataclasses
+    cfg = smoke_config("qwen3-moe-30b-a3b")
+    ep = build_model(dataclasses.replace(cfg, capacity_factor=8.0), mesh)
+    tp = build_model(dataclasses.replace(cfg, moe_mode="tp"), mesh)
+    params, _ = ep.init(jax.random.key(0))
+    batch = make_batch(cfg, 2, 16, key=5)
+    x = ep._embed_inputs(params, {"tokens": batch["tokens"]})
+    h1, _, a1 = ep._stack(params, x)
+    h2, _, a2 = tp._stack(params, x)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=2e-5)
+    np.testing.assert_allclose(float(a1), float(a2), rtol=1e-5)
+
+
+def test_moe_capacity_drops_tokens(mesh):
+    """Low capacity must change outputs (token dropping is real)."""
+    import dataclasses
+    cfg = smoke_config("qwen3-moe-30b-a3b")
+    lo = build_model(dataclasses.replace(cfg, capacity_factor=0.25), mesh)
+    hi = build_model(dataclasses.replace(cfg, capacity_factor=8.0), mesh)
+    params, _ = lo.init(jax.random.key(0))
+    batch = make_batch(cfg, 2, 32, key=6)
+    x = lo._embed_inputs(params, {"tokens": batch["tokens"]})
+    h1, _, _ = lo._stack(params, x)
+    h2, _, _ = hi._stack(params, x)
+    assert float(jnp.max(jnp.abs(h1 - h2))) > 1e-4
+
+
+def test_rwkv_chunked_equals_naive_scan(mesh):
+    """Chunkwise-parallel WKV == naive per-step recurrence."""
+    from repro.models.rwkv6 import wkv_chunked, wkv_step
+    B, S, H, dh = 2, 128, 2, 8
+    k = jax.random.key(7)
+    ks = jax.random.split(k, 5)
+    r, kk, v = (jax.random.normal(ks[i], (B, S, H, dh)) for i in range(3))
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, S, H, dh)) * 0.5 - 0.5)
+    u = jax.random.normal(ks[4], (H, dh)) * 0.5
+    state0 = jnp.zeros((B, H, dh, dh))
+    o_fast, s_fast = wkv_chunked(r, kk, v, logw, u, state0)
+    o_ref = []
+    s = state0
+    for t in range(S):
+        o_t, s = wkv_step(r[:, t], kk[:, t], v[:, t], logw[:, t], u, s)
+        o_ref.append(o_t)
+    o_ref = jnp.stack(o_ref, axis=1)
+    np.testing.assert_allclose(np.asarray(o_fast), np.asarray(o_ref),
+                               atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s_fast), np.asarray(s),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_local_attention_window(mesh):
+    """A token > window away must not influence the output."""
+    import dataclasses
+    cfg = dataclasses.replace(smoke_config("recurrentgemma-2b"),
+                              block_pattern=("local",), n_layers=1, window=4)
+    model = build_model(cfg, mesh)
+    params, _ = model.init(jax.random.key(0))
+    B, S = 1, 12
+    t1 = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab)
+    t2 = t1.at[0, 0].set((t1[0, 0] + 7) % cfg.vocab)  # perturb far-past token
+    outs = []
+    for tk in (t1, t2):
+        x = model._embed_inputs(params, {"tokens": tk})
+        h, _, _ = model._stack(params, x)
+        outs.append(model.logits(params, h))
+    # last position attends only to the last `window` tokens
+    np.testing.assert_allclose(np.asarray(outs[0][:, -1]),
+                               np.asarray(outs[1][:, -1]), atol=1e-5)
+    assert float(jnp.max(jnp.abs(outs[0][:, 0] - outs[1][:, 0]))) > 1e-4
+
+
+def test_all_full_configs_construct():
+    """The real (non-reduced) configs are well-formed (no allocation)."""
+    for a in ARCHS:
+        cfg = get_config(a)
+        assert cfg.d_model % cfg.n_heads == 0 or cfg.d_head
+        assert cfg.head_dim % 16 == 0  # KV-cache dh sharding assumption
+        if cfg.n_experts:
+            assert cfg.n_experts % 16 == 0
+        pat = cfg.pattern()
+        assert len(pat) == cfg.n_layers
