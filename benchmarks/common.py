@@ -39,8 +39,9 @@ def emit(name: str, us_per_call: float, derived: str):
 
 def riblt_symbols_to_decode(set_a, set_b, nbytes, key=None) -> int:
     """Exact minimal prefix length that decodes (one-symbol stream steps)."""
-    from repro.core import CodedSymbols, Encoder, StreamDecoder
+    from repro.core import Encoder
     from repro.core.hashing import DEFAULT_KEY
+    from repro.protocol import FixedBlock, Session, SymbolStream, run_session
     key = key or DEFAULT_KEY
     A = Encoder(nbytes, key)
     B = Encoder(nbytes, key)
@@ -48,14 +49,6 @@ def riblt_symbols_to_decode(set_a, set_b, nbytes, key=None) -> int:
         A.add_items(set_a)
     if len(set_b):
         B.add_items(set_b)
-    dec = StreamDecoder(nbytes, local=B, key=key)
-    m = 0
-    step = 1
-    while m < 1 << 22:
-        sym = A.symbols(m + step)
-        batch = CodedSymbols(sym.sums[m:], sym.checks[m:], sym.counts[m:],
-                             nbytes)
-        m += step
-        if dec.receive(batch):
-            return dec.decoded_at
-    raise RuntimeError("did not decode")
+    rep = run_session(SymbolStream(A),
+                      Session(local=B, pacing=FixedBlock(1)))
+    return rep.symbols_used

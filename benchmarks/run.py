@@ -24,7 +24,8 @@ def main() -> None:
                     help="render roofline table from dry-run artifacts")
     args = ap.parse_args()
 
-    from . import alpha, itemsize, kernelbench, overhead, setsize, statesync, throughput
+    from . import (alpha, itemsize, kernelbench, overhead, setsize, statesync,
+                   throughput, wirebench)
     suites = [
         ("overhead", overhead),      # Figs 4, 6
         ("throughput", throughput),  # Figs 7, 8
@@ -33,6 +34,7 @@ def main() -> None:
         ("statesync", statesync),    # Figs 11, 12
         ("alpha", alpha),            # Fig 14
         ("kernelbench", kernelbench),  # device-encoder kernel (framework)
+        ("wirebench", wirebench),    # §6 wire codec: vectorized vs loop
     ]
     for name, mod in suites:
         if args.only and args.only not in name:

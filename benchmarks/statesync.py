@@ -27,23 +27,20 @@ BW = 20e6 / 8                 # 20 Mbps in bytes/s
 
 
 def riblt_cost(a, b, d):
-    """Bytes from the exact decodable prefix (block-streamed, like the wire
-    protocol); CPU from bulk encode+decode (symbols arrive at line rate and
-    are decoded incrementally — the paper's Bob is throughput-bound)."""
-    from repro.core import CodedSymbols, Encoder, StreamDecoder, peel
+    """Bytes from the exact decodable prefix (window-streamed by a protocol
+    Session, like the wire path); CPU from bulk encode+decode (symbols
+    arrive at line rate and are decoded incrementally — the paper's Bob is
+    throughput-bound)."""
+    from repro.core import Encoder, peel
+    from repro.protocol import Exponential, Session, SymbolStream, run_session
     A = Encoder(ITEM)
     A.add_items(a)
     B = Encoder(ITEM)
     B.add_items(b)
-    dec = StreamDecoder(ITEM, local=B)
-    m, step = 0, 64
-    while not dec.decoded:
-        sym = A.symbols(m + step)
-        dec.receive(CodedSymbols(sym.sums[m:], sym.checks[m:],
-                                 sym.counts[m:], ITEM))
-        m += step
-        step = max(step, m // 2)
-    m = dec.decoded_at
+    rep = run_session(SymbolStream(A),
+                      Session(local=B,
+                              pacing=Exponential(block=64, growth=1.5)))
+    m = rep.symbols_used
     # CPU cost: fresh bulk encode of the used prefix + one-shot peel
     t0 = time.perf_counter()
     A2 = Encoder(ITEM)

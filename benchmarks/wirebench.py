@@ -1,0 +1,44 @@
+"""Wire codec micro-benchmark: vectorized vs per-symbol-loop frame codecs.
+
+The protocol layer serializes every window a session pulls, so codec
+throughput bounds the wire path the same way encode throughput bounds the
+symbol path.  Measures symbols/sec for serialize and deserialize on the
+same frames (`encode_frames` vs `encode_frames_loop`, both producing
+byte-identical output).
+"""
+from __future__ import annotations
+
+from .common import emit, rand_items, timeit
+
+
+def main(quick: bool = True):
+    from repro.core import encode
+    from repro.core.wire import (decode_frames, decode_frames_loop,
+                                 encode_frames, encode_frames_loop)
+    m = 2048 if quick else 16384
+    repeat = 3 if quick else 5
+    for nbytes in (16, 92):
+        items = rand_items(4 * m, nbytes)
+        sym = encode(items, nbytes, m)
+        blob = encode_frames(sym)
+        assert blob == encode_frames_loop(sym)  # identical wire format
+        for name, fn, arg in (
+                ("enc_vec", encode_frames, sym),
+                ("enc_loop", encode_frames_loop, sym),
+                ("dec_vec", decode_frames, blob),
+                ("dec_loop", decode_frames_loop, blob)):
+            t, _ = timeit(fn, arg, repeat=repeat)
+            emit(f"wire_{name}_l{nbytes}", t / m * 1e6,
+                 f"{m / t / 1e6:.2f}Msym/s bytes/sym="
+                 f"{len(blob) / m:.1f}")
+        t_v, _ = timeit(encode_frames, sym, repeat=repeat)
+        t_l, _ = timeit(encode_frames_loop, sym, repeat=repeat)
+        d_v, _ = timeit(decode_frames, blob, repeat=repeat)
+        d_l, _ = timeit(decode_frames_loop, blob, repeat=repeat)
+        emit(f"wire_speedup_l{nbytes}", 0.0,
+             f"encode {t_l / t_v:.0f}x decode {d_l / d_v:.0f}x "
+             f"(vectorized over loop)")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,29 +3,32 @@ replicas at very different staleness — no per-replica encoding work
 (paper §4.1: "the same sequence ... can be used to reconcile any number of
 differences with any other set").
 
+Each replica opens its own ``Session`` with its own pacing policy, and all
+of them pull byte frames from the single shared ``SymbolStream``: the
+peer's prefix cache is extended once, by whichever session reaches
+furthest, and every window served is a zero-copy view of it.
+
     PYTHONPATH=src python examples/multi_peer_sync.py
 """
 import numpy as np
 
-from repro.core import CodedSymbols, Sketch, StreamDecoder
+from repro.core import Sketch
+from repro.protocol import FixedBlock, Session, SymbolStream, run_session
 
 rng = np.random.default_rng(7)
 state = [bytes([0]) + rng.bytes(15) for _ in range(50_000)]
 
-peer = Sketch.from_items(state, nbytes=16)          # encodes ONCE
+peer = SymbolStream.from_items(state, nbytes=16)    # encodes ONCE
 
 for staleness in (2, 40, 700):
     replica_state = state[:-staleness] + \
         [bytes([9]) + rng.bytes(15) for _ in range(3)]
     replica = Sketch.from_items(replica_state, nbytes=16)
-    dec = StreamDecoder(16, local=replica)
-    m = 0
-    while not dec.decoded:
-        sym = peer.symbols(m + 16)                  # same universal stream
-        dec.receive(CodedSymbols(sym.sums[m:], sym.checks[m:],
-                                 sym.counts[m:], 16))
-        m += 16
-    need, stale_items = dec.result()
+    session = Session(local=replica, pacing=FixedBlock(16))
+    report = run_session(peer, session, wire=True)   # same universal stream
     d = staleness + 3
-    print(f"staleness d={d}: decoded with {dec.decoded_at} symbols "
-          f"(overhead {dec.decoded_at/d:.2f}x) from the shared stream")
+    print(f"staleness d={d}: decoded with {report.symbols_used} symbols "
+          f"({report.bytes_received} wire bytes, overhead "
+          f"{report.overhead(d):.2f}x) from the shared stream")
+
+print(f"peer cache holds {peer.m} symbols — extended once, served thrice")

@@ -1,10 +1,16 @@
 """Quickstart: reconcile two sets with Rateless IBLT (paper's core API).
 
+Alice publishes her set as one universal ``SymbolStream``; Bob opens a
+``Session`` against it.  The session pulls windows of coded symbols — here
+as real wire ``bytes`` (paper §6 encoding) — peels as they arrive, and
+stops the moment symbol 0 empties.  Nobody knew d = 42 in advance.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import Sketch, reconcile_sets
+from repro.core import Sketch
+from repro.protocol import Session, SymbolStream, run_session
 
 rng = np.random.default_rng(0)
 
@@ -13,18 +19,25 @@ common = [bytes([0]) + rng.bytes(31) for _ in range(100_000)]
 only_alice = [bytes([1]) + rng.bytes(31) for _ in range(30)]
 only_bob = [bytes([2]) + rng.bytes(31) for _ in range(12)]
 
-alice = Sketch.from_items(common + only_alice, nbytes=32)
+alice = SymbolStream.from_items(common + only_alice, nbytes=32)
 bob = Sketch.from_items(common + only_bob, nbytes=32)
 
-# Alice streams coded symbols; Bob peels as they arrive and stops the
-# stream the moment symbol 0 empties.  Nobody knew d = 42 in advance.
-got_a, got_b, m_used = reconcile_sets(alice, bob)
+report = run_session(alice, Session(local=bob), wire=True)
 
 d = len(only_alice) + len(only_bob)
 print(f"difference size d = {d}")
-print(f"coded symbols used = {m_used}  (overhead {m_used/d:.2f}x, "
-      f"paper: 1.35-1.72x)")
-print(f"bytes ~= {m_used * (32+8+1)} vs naive {len(common+only_alice)*32}")
+print(f"coded symbols used = {report.symbols_used}  "
+      f"(overhead {report.overhead(d):.2f}x, paper: 1.35-1.72x)")
+print(f"wire bytes = {report.bytes_received} "
+      f"vs naive {len(common + only_alice) * 32}")
+got_a, got_b = report.only_remote_bytes(), report.only_local_bytes()
 assert sorted(x.tobytes() for x in got_a) == sorted(only_alice)
 assert sorted(x.tobytes() for x in got_b) == sorted(only_bob)
 print("recovered symmetric difference exactly. ✓")
+
+# the one-call convenience wrapper (same Session machinery underneath):
+from repro.core import reconcile_sets
+got_a2, got_b2, m_used = reconcile_sets(Sketch.from_items(
+    common + only_alice, nbytes=32), bob)
+assert sorted(x.tobytes() for x in got_a2) == sorted(only_alice)
+print(f"reconcile_sets agrees (m = {m_used}). ✓")

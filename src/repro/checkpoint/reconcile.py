@@ -4,20 +4,24 @@ ledger replaced by a checkpoint store).
 
 A stale/corrupt replica holds store B; a healthy peer holds store A.  The
 stores' manifests are sets of 16-byte records (key-hash ‖ chunk-digest).
-The peer streams *universal* coded symbols (it can serve any number of
-replicas at any staleness with the same stream — §4.1 universality); the
-replica subtracts its own symbols, peels, learns exactly which chunk ids
-differ, and fetches only those chunks.  No difference-size estimate, no
-round trips beyond the fetch.
+The peer exposes one universal `SymbolStream` (it can serve any number of
+replicas at any staleness with the same stream — §4.1 universality); each
+replica runs a `repro.protocol.Session` over the byte-level wire frames,
+subtracting its own symbols, peeling as frames arrive, and learns exactly
+which chunk ids differ — then fetches only those chunks.  No
+difference-size estimate, no round trips beyond the fetch.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 
 import numpy as np
 
-from repro.core import CodedSymbols, Sketch, StreamDecoder
+from repro.core import CodedSymbols, Sketch
 from repro.core.hashing import siphash24
+from repro.protocol import Exponential, Session, SymbolStream
 
 REC_BYTES = 16
 
@@ -25,7 +29,7 @@ REC_BYTES = 16
 @dataclasses.dataclass
 class SyncReport:
     symbols_used: int
-    symbol_bytes: int
+    symbol_bytes: int      # actual wire traffic of the symbol frames
     chunks_fetched: int
     chunk_bytes: int
     naive_bytes: int       # cost of downloading the full store
@@ -39,26 +43,53 @@ class SyncReport:
         return self.naive_bytes / max(self.total_bytes, 1)
 
 
-class PeerEndpoint:
-    """The healthy side: serves coded symbols + chunk bodies.
+def _cid_hash(cid: str) -> int:
+    return int(siphash24(np.frombuffer(
+        cid.encode().ljust(64, b"\0")[:64], np.uint8)
+        .view(np.uint32)[None, :])[0])
 
-    The symbol cache is universal and incremental: it is extended on demand
-    and reused across every syncing replica; when the store changes, the
-    cache is *updated* (add/remove the delta records) instead of rebuilt —
-    the paper's linearity property."""
+
+def _record_key_hashes(recs: np.ndarray) -> np.ndarray:
+    """(n, 4) uint32 record words -> (n,) uint64 leading key-hash halves."""
+    if recs.shape[0] == 0:
+        return np.zeros(0, np.uint64)
+    w = np.ascontiguousarray(recs[:, :2]).astype(np.uint64)
+    return w[:, 0] | (w[:, 1] << np.uint64(32))
+
+
+class PeerEndpoint:
+    """The healthy side: serves coded-symbol wire frames + chunk bodies.
+
+    The symbol stream is universal and incremental: it is extended on
+    demand and reused across every syncing replica; when the store changes,
+    the cached prefix is *updated* (add/remove the delta records) instead of
+    rebuilt — the paper's linearity property."""
 
     def __init__(self, store):
         self.store = store
-        self._sketch = Sketch.from_items(store.records(), REC_BYTES)
-        self._cid_by_key = {}
-        for cid in store.manifest()["chunks"]:
+        self.stream = SymbolStream(Sketch.from_items(store.records(),
+                                                     REC_BYTES))
+        self._cid_by_key: dict[int, str] = {}
+        self._kh_by_cid: dict[str, int] = {}
+        self._refresh_cid_map()
+
+    def _refresh_cid_map(self):
+        """Sync the kh→cid map with the manifest, hashing only the delta."""
+        chunks = self.store.manifest()["chunks"].keys()
+        for cid in self._kh_by_cid.keys() - chunks:
+            self._cid_by_key.pop(self._kh_by_cid.pop(cid), None)
+        for cid in chunks - self._kh_by_cid.keys():
             kh = _cid_hash(cid)
+            self._kh_by_cid[cid] = kh
             self._cid_by_key[kh] = cid
 
+    def frames(self, lo: int, hi: int) -> bytes:
+        """Wire frame for symbols [lo, hi) of the universal stream."""
+        return self.stream.frames(lo, hi)
+
     def symbols(self, lo: int, hi: int) -> CodedSymbols:
-        sym = self._sketch.symbols(hi)
-        return CodedSymbols(sym.sums[lo:], sym.checks[lo:], sym.counts[lo:],
-                            REC_BYTES)
+        """Deprecated shim (pre-session API): raw symbol window [lo, hi)."""
+        return self.stream.window(lo, hi).copy()
 
     def fetch_chunk(self, cid: str) -> bytes:
         with open(self.store._chunk_path(cid), "rb") as f:
@@ -67,41 +98,30 @@ class PeerEndpoint:
     def notify_update(self, added: np.ndarray, removed: np.ndarray):
         """Store changed: update the universal symbol cache in place."""
         if len(added):
-            self._sketch.add_items(added)
+            self.stream.add_items(added)
         if len(removed):
-            self._sketch.remove_items(removed)
-
-
-def _cid_hash(cid: str) -> int:
-    return int(siphash24(np.frombuffer(
-        cid.encode().ljust(64, b"\0")[:64], np.uint8)
-        .view(np.uint32)[None, :])[0])
+            self.stream.remove_items(removed)
+        self._refresh_cid_map()
 
 
 def sync_from_peer(store, peer: PeerEndpoint, block: int = 16,
                    max_m: int = 1 << 20) -> SyncReport:
     """Repair `store` to match `peer.store`.  Returns transfer accounting."""
     local = Sketch.from_items(store.records(), REC_BYTES)
-    dec = StreamDecoder(REC_BYTES, local=local)
-    m = 0
-    step = block
-    while not dec.decoded:
-        dec.receive(peer.symbols(m, m + step))
-        m += step
-        step = max(block, m // 2)
-        if m > max_m:
-            raise RuntimeError("reconciliation did not converge")
-    only_peer, only_local = dec.result()  # records A∖B (need) and B∖A (stale)
+    session = Session(local=local,
+                      pacing=Exponential(block=block, growth=1.5),
+                      max_m=max_m)
+    while (win := session.request()) is not None:
+        session.offer_bytes(peer.frames(*win))
+    rep = session.report()
+    only_peer, only_local = rep.only_remote, rep.only_local
     man = store.manifest()
     peer_man = peer.store.manifest()
     # map recovered records back to chunk ids via the key-hash half
     fetched = 0
     fetched_bytes = 0
-    for rec in only_peer:
-        kh = int(rec.view(np.uint64)[0]) if rec.dtype == np.uint32 else 0
-        raw = np.ascontiguousarray(rec).view(np.uint8)
-        kh = int(np.frombuffer(raw[:8].tobytes(), np.uint64)[0])
-        cid = peer._cid_by_key.get(kh)
+    for kh in _record_key_hashes(only_peer):
+        cid = peer._cid_by_key.get(int(kh))
         if cid is None:
             continue
         data = peer.fetch_chunk(cid)
@@ -110,21 +130,20 @@ def sync_from_peer(store, peer: PeerEndpoint, block: int = 16,
         man["chunks"][cid] = peer_man["chunks"][cid]
         fetched += 1
         fetched_bytes += len(data)
-    # records only in the stale store = chunks that no longer exist upstream
-    for rec in only_local:
-        raw = np.ascontiguousarray(rec).view(np.uint8)
-        kh = int(np.frombuffer(raw[:8].tobytes(), np.uint64)[0])
-        for cid, dig in list(man["chunks"].items()):
-            if _cid_hash(cid) == kh and cid not in peer_man["chunks"]:
-                del man["chunks"][cid]
+    # records only in the stale store = chunks that no longer exist
+    # upstream; one reverse key-hash map, built once, replaces the old
+    # per-record rescan of the whole manifest.
+    key_to_cid = {_cid_hash(cid): cid for cid in man["chunks"]}
+    for kh in _record_key_hashes(only_local):
+        cid = key_to_cid.get(int(kh))
+        if cid is not None and cid not in peer_man["chunks"]:
+            man["chunks"].pop(cid, None)
     man["leaves"] = peer_man["leaves"]
     man["step"] = peer_man["step"]
-    import json, os
     with open(os.path.join(store.root, "manifest.json"), "w") as f:
         json.dump(man, f)
-    dec_m = dec.decoded_at
     naive = sum(len(peer.fetch_chunk(cid)) for cid in peer_man["chunks"])
-    return SyncReport(symbols_used=dec_m,
-                      symbol_bytes=dec_m * (REC_BYTES + 8 + 1),
+    return SyncReport(symbols_used=rep.symbols_used,
+                      symbol_bytes=rep.bytes_received,
                       chunks_fetched=fetched, chunk_bytes=fetched_bytes,
                       naive_bytes=naive)

@@ -142,6 +142,18 @@ class Encoder:
         self.extend(m)
         return self._cache.prefix(m).copy()
 
+    def window(self, lo: int, hi: int) -> CodedSymbols:
+        """Zero-copy view of coded symbols [lo, hi), extending on demand.
+
+        The view aliases the cache *as of this call*: a later ``extend``
+        past the current prefix reallocates the cache and detaches the
+        view, while in-prefix ``add_items``/``remove_items`` mutate it.
+        Consume (or ``.copy()``) a window before touching the encoder
+        again; do not hold views across encoder operations.
+        """
+        self.extend(hi)
+        return self._cache.window(lo, hi)
+
 
 def encode(items, nbytes: int, m: int, key=DEFAULT_KEY) -> CodedSymbols:
     """One-shot: first m coded symbols of a set."""

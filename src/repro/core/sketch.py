@@ -5,15 +5,16 @@
     >>> b = Sketch.from_items(list_of_bytes_b, nbytes=32)
     >>> only_a, only_b, m_used = reconcile_sets(a, b)
 
-`reconcile_sets` mimics the live protocol: stream A's symbols in growing
-blocks into a StreamDecoder holding B, stop at decode (symbol 0 empties).
+`reconcile_sets` runs the live protocol: A's universal stream is pulled in
+growing windows by a `repro.protocol.Session` holding B, which stops at
+decode (symbol 0 empties).  For multiple peers, pacing control, or the
+bytes-on-the-wire path, use `repro.protocol` directly.
 """
 from __future__ import annotations
 
 from .decoder import PeelResult, peel
 from .encoder import Encoder
-from .hashing import DEFAULT_KEY, words_to_bytes
-from .stream import StreamDecoder
+from .hashing import DEFAULT_KEY
 from .symbols import CodedSymbols
 
 
@@ -33,20 +34,14 @@ class Sketch(Encoder):
 
 
 def reconcile_sets(a: Sketch, b: Sketch, block: int = 8, max_m: int = 1 << 22):
-    """Run the rateless protocol: A streams blocks until B decodes.
+    """Run the rateless protocol: A streams windows until B decodes.
 
+    Thin wrapper over ``repro.protocol`` (one `Session` pulling A's
+    `SymbolStream` with the doubling schedule this function always used).
     Returns (items_only_in_A bytes-array, items_only_in_B, symbols_used).
     """
-    dec = StreamDecoder(b.nbytes, local=b, key=b.key)
-    m = 0
-    while m < max_m:
-        take = max(block, m)  # exponential-ish growth of block size
-        sym = a.symbols(m + take)
-        batch = CodedSymbols(sym.sums[m:], sym.checks[m:], sym.counts[m:],
-                             a.nbytes)
-        m += take
-        if dec.receive(batch):
-            only_a, only_b = dec.result()
-            return (words_to_bytes(only_a, a.nbytes),
-                    words_to_bytes(only_b, a.nbytes), dec.decoded_at)
-    raise RuntimeError("reconciliation did not converge within max_m symbols")
+    from repro.protocol import Exponential, Session, SymbolStream, run_session
+    session = Session(local=b, pacing=Exponential(block=block, growth=2.0),
+                      max_m=max_m)
+    rep = run_session(SymbolStream(a), session)
+    return rep.only_remote_bytes(), rep.only_local_bytes(), rep.symbols_used

@@ -49,9 +49,7 @@ class StreamDecoder:
         """Feed symbols [m, m+sym.m) of A's stream.  Returns `decoded`."""
         old = self.work.m
         if self.local is not None:
-            mine = self.local.symbols(old + sym.m)
-            loc = CodedSymbols(mine.sums[old:], mine.checks[old:],
-                               mine.counts[old:], self.nbytes)
+            loc = self.local.window(old, old + sym.m)
             sym = sym.subtract(loc)
         self.work = self.work.concat(sym.copy())
         self.symbols_received = self.work.m

@@ -41,6 +41,26 @@ class CodedSymbols:
         return CodedSymbols(self.sums[:m], self.checks[:m], self.counts[:m],
                             self.nbytes)
 
+    def window(self, lo: int, hi: int | None = None) -> "CodedSymbols":
+        """Zero-copy view of symbols [lo, hi) of this prefix.
+
+        The view aliases this container's arrays (mutations are shared);
+        call ``.copy()`` on the result for an isolated snapshot.
+        """
+        hi = self.m if hi is None else hi
+        if not 0 <= lo <= hi <= self.m:
+            raise IndexError(f"window [{lo}, {hi}) outside prefix of {self.m}")
+        return CodedSymbols(self.sums[lo:hi], self.checks[lo:hi],
+                            self.counts[lo:hi], self.nbytes)
+
+    def __getitem__(self, s: slice) -> "CodedSymbols":
+        if not isinstance(s, slice):
+            raise TypeError("CodedSymbols supports slice indexing only")
+        lo, hi, step = s.indices(self.m)
+        if step != 1:
+            raise ValueError("CodedSymbols slicing requires step 1")
+        return self.window(lo, hi)
+
     def subtract(self, other: "CodedSymbols") -> "CodedSymbols":
         """self ⊕ other (paper's ⊕ is subtraction: XOR sums/checks, −counts)."""
         m = min(self.m, other.m)

@@ -3,7 +3,25 @@
 The ``count`` field of the i-th coded symbol of a set of N items is
 concentrated around its expectation N·ρ(i); we transmit only the zig-zag
 varint of (count − round(N·ρ(i))), averaging ~1 byte/symbol.  ``sum`` and
-``checksum`` travel raw.  N rides with symbol 0.
+``checksum`` travel raw (ℓ and 8 bytes).
+
+Two codecs share one body format:
+
+* :func:`encode_frames` / :func:`decode_frames` — the protocol-layer frame:
+  a 24-byte self-describing header ``(m, nbytes, n_items, start)`` so a
+  receiver can consume any window of the universal stream without side
+  channels.  This is what :class:`repro.protocol.Session` speaks.
+* :func:`encode_stream` / :func:`decode_stream` — the original 16-byte
+  header ``(m, nbytes, n_items)``; ``start`` is caller-supplied.  The
+  Python API is kept for compatibility, but the body layout below is NOT
+  readable by the pre-protocol interleaved encoder (and carries no version
+  field): both ends must run the same revision.
+
+Both are fully vectorized: the body is columnar (all sums, then all
+checksums, then all varint count-deltas), packed and unpacked with numpy —
+no per-symbol Python loop.  ``*_loop`` reference implementations produce
+byte-identical output and exist for differential testing and the
+``benchmarks/wirebench.py`` comparison.
 """
 from __future__ import annotations
 
@@ -13,6 +31,10 @@ import numpy as np
 
 from .mapping import rho
 from .symbols import CodedSymbols
+
+_FRAME_HDR = struct.Struct("<IIQQ")   # m, nbytes, n_items, start
+_STREAM_HDR = struct.Struct("<IIQ")   # m, nbytes, n_items (legacy)
+_MAX_VARINT = 10                      # ⌈64/7⌉ bytes bound a u64 varint
 
 
 def _zigzag(v: np.ndarray) -> np.ndarray:
@@ -25,7 +47,149 @@ def _unzigzag(u: np.ndarray) -> np.ndarray:
     return ((u >> np.uint64(1)).astype(np.int64)) ^ -(u & np.uint64(1)).astype(np.int64)
 
 
-def _varint_encode(u: int) -> bytes:
+def expected_counts(n_items: int, start: int, stop: int) -> np.ndarray:
+    i = np.arange(start, stop, dtype=np.float64)
+    return np.rint(n_items * rho(i)).astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized varint (LEB128) codec for uint64 vectors.
+# ---------------------------------------------------------------------------
+def _varint_encode_vec(u: np.ndarray) -> np.ndarray:
+    """(n,) uint64 -> concatenated LEB128 bytes, one varint per value."""
+    u = np.ascontiguousarray(u, dtype=np.uint64)
+    n = u.shape[0]
+    if n == 0:
+        return np.zeros(0, np.uint8)
+    shifts = (np.arange(_MAX_VARINT, dtype=np.uint64) * np.uint64(7))
+    chunks = (u[:, None] >> shifts[None, :]) & np.uint64(0x7F)   # (n, 10)
+    nb = np.ones(n, np.int64)                                    # bytes/value
+    v = u >> np.uint64(7)
+    for _ in range(_MAX_VARINT - 1):
+        nb += (v != 0)
+        v >>= np.uint64(7)
+    cols = np.arange(_MAX_VARINT)[None, :]
+    cont = cols < (nb[:, None] - 1)                              # MSB flags
+    mat = (chunks | (cont.astype(np.uint64) << np.uint64(7))).astype(np.uint8)
+    return mat[cols < nb[:, None]]                               # row-major
+
+
+def _varint_decode_vec(buf: np.ndarray, n: int) -> tuple[np.ndarray, int]:
+    """Decode exactly ``n`` varints from the head of ``buf`` (uint8 view).
+
+    Returns (values uint64, bytes consumed).
+    """
+    if n == 0:
+        return np.zeros(0, np.uint64), 0
+    is_last = (buf & 0x80) == 0
+    ends = np.flatnonzero(is_last)
+    if ends.size < n:
+        raise ValueError("truncated varint section")
+    used = int(ends[n - 1]) + 1
+    buf = buf[:used]
+    is_last = is_last[:used]
+    value_id = np.cumsum(np.r_[0, is_last[:-1].astype(np.int64)])
+    starts = np.r_[np.int64(0), ends[: n - 1] + 1]
+    pos = np.arange(used, dtype=np.int64) - starts[value_id]
+    vals = np.zeros(n, np.uint64)
+    np.bitwise_or.at(vals, value_id,
+                     (buf & 0x7F).astype(np.uint64) << (np.uint64(7) * pos.astype(np.uint64)))
+    return vals, used
+
+
+def varint_count_bytes(counts: np.ndarray, n_items: int | None = None,
+                       start: int = 0) -> int:
+    """Size in bytes of the varint-delta encoding of a count vector."""
+    counts = np.asarray(counts, dtype=np.int64)
+    if n_items is None:
+        n_items = int(abs(counts[0])) if counts.size else 0
+    exp = expected_counts(n_items, start, start + counts.size)
+    return int(_varint_encode_vec(_zigzag(counts - exp)).size)
+
+
+# ---------------------------------------------------------------------------
+# Columnar body: [sums: m·ℓ] [checks: m·8 LE] [count deltas: varints].
+# ---------------------------------------------------------------------------
+def _pack_body(sym: CodedSymbols, exp: np.ndarray) -> bytes:
+    raw = np.ascontiguousarray(sym.sums).view(np.uint8).reshape(sym.m, 4 * sym.L)
+    sums = np.ascontiguousarray(raw[:, : sym.nbytes])           # drop word pad
+    checks = np.ascontiguousarray(sym.checks.astype("<u8"))
+    deltas = _varint_encode_vec(_zigzag(sym.counts - exp))
+    return sums.tobytes() + checks.tobytes() + deltas.tobytes()
+
+
+def _unpack_body(buf: memoryview, pos: int, m: int, nbytes: int,
+                 exp: np.ndarray) -> tuple[CodedSymbols, int]:
+    L = (nbytes + 3) // 4
+    sym = CodedSymbols.zeros(m, nbytes)
+    raw = np.frombuffer(buf, np.uint8, count=m * nbytes, offset=pos)
+    pos += m * nbytes
+    padded = sym.sums.view(np.uint8).reshape(m, 4 * L)
+    padded[:, :nbytes] = raw.reshape(m, nbytes)
+    sym.checks[:] = np.frombuffer(buf, "<u8", count=m, offset=pos)
+    pos += 8 * m
+    z, used = _varint_decode_vec(
+        np.frombuffer(buf, np.uint8, offset=pos), m)
+    pos += used
+    sym.counts[:] = _unzigzag(z) + exp
+    return sym, pos
+
+
+def _infer_n_items(sym: CodedSymbols, start: int, n_items: int | None) -> int:
+    """Default n_items to |count of symbol 0|; only valid at start == 0."""
+    if n_items is not None:
+        return n_items
+    if start != 0:
+        raise ValueError("n_items is required for a nonzero-start window")
+    return int(abs(sym.counts[0])) if sym.m else 0
+
+
+# ---------------------------------------------------------------------------
+# Protocol frames (self-describing windows of the universal stream).
+# ---------------------------------------------------------------------------
+def encode_frames(sym: CodedSymbols, start: int = 0,
+                  n_items: int | None = None) -> bytes:
+    """Serialize symbols [start, start+m) of the stream of a set with
+    ``n_items`` elements into one self-describing frame."""
+    n_items = _infer_n_items(sym, start, n_items)
+    exp = expected_counts(n_items, start, start + sym.m)
+    return _FRAME_HDR.pack(sym.m, sym.nbytes, n_items, start) + \
+        _pack_body(sym, exp)
+
+
+def decode_frames(data: bytes) -> tuple[CodedSymbols, int, int]:
+    """Inverse of :func:`encode_frames`: (symbols, n_items, start)."""
+    m, nbytes, n_items, start = _FRAME_HDR.unpack_from(data, 0)
+    exp = expected_counts(n_items, start, start + m)
+    sym, _ = _unpack_body(memoryview(data), _FRAME_HDR.size, m, nbytes, exp)
+    return sym, n_items, start
+
+
+# ---------------------------------------------------------------------------
+# Legacy stream codec (16-byte header, caller-supplied start).
+# ---------------------------------------------------------------------------
+def encode_stream(sym: CodedSymbols, start: int = 0,
+                  n_items: int | None = None) -> bytes:
+    """Serialize symbols [start, start+m) of a stream whose set has
+    ``n_items`` elements (defaults to |count of symbol 0| when start==0)."""
+    n_items = _infer_n_items(sym, start, n_items)
+    exp = expected_counts(n_items, start, start + sym.m)
+    return _STREAM_HDR.pack(sym.m, sym.nbytes, n_items) + _pack_body(sym, exp)
+
+
+def decode_stream(data: bytes, start: int = 0) -> tuple[CodedSymbols, int]:
+    """Inverse of :func:`encode_stream`.  Returns (symbols, n_items)."""
+    m, nbytes, n_items = _STREAM_HDR.unpack_from(data, 0)
+    exp = expected_counts(n_items, start, start + m)
+    sym, _ = _unpack_body(memoryview(data), _STREAM_HDR.size, m, nbytes, exp)
+    return sym, n_items
+
+
+# ---------------------------------------------------------------------------
+# Per-symbol loop reference (byte-identical output) — kept for differential
+# tests and the wirebench vectorized-vs-loop comparison.
+# ---------------------------------------------------------------------------
+def _varint_encode_one(u: int) -> bytes:
     out = bytearray()
     while True:
         b = u & 0x7F
@@ -37,7 +201,7 @@ def _varint_encode(u: int) -> bytes:
             return bytes(out)
 
 
-def _varint_decode(buf: memoryview, pos: int):
+def _varint_decode_one(buf, pos: int):
     shift = 0
     val = 0
     while True:
@@ -49,55 +213,38 @@ def _varint_decode(buf: memoryview, pos: int):
         shift += 7
 
 
-def expected_counts(n_items: int, start: int, stop: int) -> np.ndarray:
-    i = np.arange(start, stop, dtype=np.float64)
-    return np.rint(n_items * rho(i)).astype(np.int64)
-
-
-def varint_count_bytes(counts: np.ndarray, n_items: int | None = None,
-                       start: int = 0) -> int:
-    """Size in bytes of the varint-delta encoding of a count vector."""
-    counts = np.asarray(counts, dtype=np.int64)
-    if n_items is None:
-        n_items = int(abs(counts[0])) if counts.size else 0
-    exp = expected_counts(n_items, start, start + counts.size)
-    z = _zigzag(counts - exp)
-    nz = np.maximum(z, 1).astype(np.float64)
-    return int(np.sum(np.ceil(np.log2(nz + 1) / 7.0).clip(min=1)))
-
-
-def encode_stream(sym: CodedSymbols, start: int = 0,
-                  n_items: int | None = None) -> bytes:
-    """Serialize symbols [start, start+m) of a stream whose set has
-    ``n_items`` elements (defaults to |count of symbol 0| when start==0)."""
-    if n_items is None:
-        assert start == 0
-        n_items = int(abs(sym.counts[0])) if sym.m else 0
+def encode_frames_loop(sym: CodedSymbols, start: int = 0,
+                       n_items: int | None = None) -> bytes:
+    """Per-symbol Python-loop encoder; output == :func:`encode_frames`."""
+    n_items = _infer_n_items(sym, start, n_items)
     exp = expected_counts(n_items, start, start + sym.m)
     deltas = _zigzag(sym.counts - exp)
-    head = struct.pack("<IIQ", sym.m, sym.nbytes, n_items)
-    body = bytearray(head)
-    raw_sums = np.ascontiguousarray(sym.sums).view(np.uint8).reshape(sym.m, -1)
+    raw = np.ascontiguousarray(sym.sums).view(np.uint8).reshape(sym.m, -1)
+    sums, checks, varints = bytearray(), bytearray(), bytearray()
     for i in range(sym.m):
-        body += raw_sums[i, : 4 * sym.L].tobytes()[: 4 * sym.L]
-        body += struct.pack("<Q", int(sym.checks[i]))
-        body += _varint_encode(int(deltas[i]))
-    return bytes(body)
+        sums += raw[i, : sym.nbytes].tobytes()
+        checks += struct.pack("<Q", int(sym.checks[i]))
+        varints += _varint_encode_one(int(deltas[i]))
+    return _FRAME_HDR.pack(sym.m, sym.nbytes, n_items, start) + \
+        bytes(sums) + bytes(checks) + bytes(varints)
 
 
-def decode_stream(data: bytes, start: int = 0) -> tuple[CodedSymbols, int]:
-    """Inverse of :func:`encode_stream`.  Returns (symbols, n_items)."""
-    m, nbytes, n_items = struct.unpack_from("<IIQ", data, 0)
-    pos = 16
+def decode_frames_loop(data: bytes) -> tuple[CodedSymbols, int, int]:
+    """Per-symbol Python-loop decoder; inverse of :func:`encode_frames`."""
+    m, nbytes, n_items, start = _FRAME_HDR.unpack_from(data, 0)
+    exp = expected_counts(n_items, start, start + m)
     L = (nbytes + 3) // 4
     sym = CodedSymbols.zeros(m, nbytes)
     buf = memoryview(data)
-    exp = expected_counts(n_items, start, start + m)
+    pos = _FRAME_HDR.size
     for i in range(m):
-        sym.sums[i] = np.frombuffer(buf[pos:pos + 4 * L], dtype=np.uint32)
-        pos += 4 * L
+        row = sym.sums[i].view(np.uint8)
+        row[:nbytes] = np.frombuffer(buf[pos:pos + nbytes], np.uint8)
+        pos += nbytes
+    for i in range(m):
         sym.checks[i] = struct.unpack_from("<Q", data, pos)[0]
         pos += 8
-        delta, pos = _varint_decode(buf, pos)
-        sym.counts[i] = _unzigzag(np.array([delta], dtype=np.uint64))[0] + exp[i]
-    return sym, n_items
+    for i in range(m):
+        delta, pos = _varint_decode_one(buf, pos)
+        sym.counts[i] = _unzigzag(np.array([delta], np.uint64))[0] + exp[i]
+    return sym, n_items, start

@@ -1,0 +1,15 @@
+"""Session-oriented reconciliation protocol (paper §4.1 universality, §6).
+
+One :class:`SymbolStream` per set — it serves zero-copy windows or wire
+byte frames of the universal coded-symbol stream to any number of
+:class:`Session` peers, each with its own :mod:`pacing <repro.protocol.pacing>`
+policy.  See ``examples/quickstart.py`` and ``examples/multi_peer_sync.py``.
+"""
+from .pacing import Exponential, FixedBlock, LineRate, Pacing
+from .session import (ProtocolError, Session, SessionReport, run_session)
+from .stream import SymbolStream
+
+__all__ = [
+    "Exponential", "FixedBlock", "LineRate", "Pacing", "ProtocolError",
+    "Session", "SessionReport", "SymbolStream", "run_session",
+]

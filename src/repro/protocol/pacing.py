@@ -1,0 +1,74 @@
+"""Pacing policies: how much more of the universal stream a session pulls.
+
+The stream is infinite and any prefix decodes once it is long enough
+(paper §4.1), so pacing only trades *overshoot* (symbols received past the
+minimal decodable prefix) against *round trips*.  The three policies here
+cover the shapes the repo's former hand-rolled grow-loops used, plus the
+paper's §6 deployment model:
+
+* :class:`FixedBlock` — constant window; overshoot ≤ block − 1, most round
+  trips.  What ``examples/multi_peer_sync.py`` hand-rolled.
+* :class:`Exponential` — window grows with the amount already sent;
+  O(log d) round trips, overshoot ≤ (growth − 1)·m.  ``growth=2`` is the
+  old ``reconcile_sets`` loop (take = max(block, m)); ``growth=1.5`` is the
+  old ``sync_from_peer`` loop (step = max(block, m // 2)).
+* :class:`LineRate` — the paper's §6 schedule: the sender streams symbols
+  continuously at line rate and the receiver ACKs termination, so one
+  bandwidth-delay product of symbols is always in flight.  Pull-model
+  equivalent: every window is ⌈BDP⌉ symbols; overshoot is bounded by the
+  BDP regardless of the difference size.
+"""
+from __future__ import annotations
+
+import math
+
+
+class Pacing:
+    """Policy interface: next window size given symbols already pulled."""
+
+    def next_take(self, m_sent: int) -> int:
+        raise NotImplementedError
+
+
+class FixedBlock(Pacing):
+    def __init__(self, block: int = 8):
+        assert block >= 1
+        self.block = block
+
+    def next_take(self, m_sent: int) -> int:
+        return self.block
+
+    def __repr__(self):
+        return f"FixedBlock({self.block})"
+
+
+class Exponential(Pacing):
+    def __init__(self, block: int = 8, growth: float = 2.0):
+        assert block >= 1 and growth > 1.0
+        self.block = block
+        self.growth = growth
+
+    def next_take(self, m_sent: int) -> int:
+        return max(self.block, int(m_sent * (self.growth - 1.0)))
+
+    def __repr__(self):
+        return f"Exponential(block={self.block}, growth={self.growth})"
+
+
+class LineRate(Pacing):
+    """Paper §6: continuous streaming with a termination ACK one RTT away.
+
+    ``bandwidth`` is in symbols/second (divide link bytes/s by the wire
+    size ℓ + 8 + ~1 of one symbol); the in-flight window is
+    ``bandwidth · rtt`` symbols.
+    """
+
+    def __init__(self, bandwidth: float, rtt: float):
+        assert bandwidth > 0 and rtt > 0
+        self.bdp = max(1, math.ceil(bandwidth * rtt))
+
+    def next_take(self, m_sent: int) -> int:
+        return self.bdp
+
+    def __repr__(self):
+        return f"LineRate(bdp={self.bdp})"

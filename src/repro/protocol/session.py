@@ -1,0 +1,179 @@
+"""Session — one peer's half of a rateless reconciliation (paper §4.1).
+
+A ``Session`` replaces the three grow-and-peel loops that used to be
+hand-rolled in ``reconcile_sets``, ``checkpoint/reconcile.py`` and
+``examples/multi_peer_sync.py``.  It owns
+
+* a :class:`~repro.core.stream.StreamDecoder` (subtracts the local set's
+  symbols index-wise, peels incrementally, terminates the moment symbol 0
+  empties — the ρ(0)=1 signal);
+* a :class:`~repro.protocol.pacing.Pacing` policy deciding how much more of
+  the remote universal stream to pull per round trip;
+* window bookkeeping: the remote stream is consumed as contiguous windows,
+  either as in-process :class:`CodedSymbols` views (``offer``) or as wire
+  byte frames (``offer_bytes``) — a session produces and consumes *bytes*,
+  not numpy internals, when run in wire mode.
+
+Pull protocol::
+
+    while (win := session.request()) is not None:
+        lo, hi = win
+        session.offer_bytes(stream.frames(lo, hi))   # or offer(window, lo)
+    report = session.report()
+
+:func:`run_session` packages that loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.hashing import DEFAULT_KEY, words_to_bytes
+from repro.core.stream import StreamDecoder
+from repro.core.symbols import CodedSymbols
+from repro.core.wire import decode_frames
+
+from .pacing import Exponential, Pacing
+from .stream import SymbolStream
+
+
+class ProtocolError(RuntimeError):
+    """A window arrived out of order / with inconsistent geometry."""
+
+
+@dataclasses.dataclass
+class SessionReport:
+    """Outcome of a completed session."""
+    only_remote: np.ndarray   # (r, L) uint32 words — items only in remote set
+    only_local: np.ndarray    # (s, L) uint32 words — items only in local set
+    nbytes: int               # item length ℓ
+    symbols_used: int         # stream prefix length at the decode signal
+    symbols_received: int     # including pacing overshoot
+    bytes_received: int       # wire-mode traffic (0 for in-process sessions)
+    remote_items: int | None  # |remote set|, learned from frame headers
+
+    def only_remote_bytes(self) -> np.ndarray:
+        """(r, ℓ) uint8 — remote-exclusive items as raw bytes."""
+        return words_to_bytes(self.only_remote, self.nbytes)
+
+    def only_local_bytes(self) -> np.ndarray:
+        return words_to_bytes(self.only_local, self.nbytes)
+
+    def overhead(self, d: int | None = None) -> float:
+        """symbols_used / d (defaults to the recovered difference size)."""
+        if d is None:
+            d = self.only_remote.shape[0] + self.only_local.shape[0]
+        return self.symbols_used / max(d, 1)
+
+
+class Session:
+    """Incremental reconciliation of one local set against a remote stream.
+
+    Parameters
+    ----------
+    local: Encoder/Sketch of the local set, or None to decode a raw stream
+        (recovers the remote set itself rather than a difference).
+    nbytes, key: stream geometry — inferred from ``local`` when given.
+    pacing: window schedule (default: the doubling schedule the old
+        ``reconcile_sets`` loop used).
+    max_m: abort bound on stream consumption.
+    """
+
+    def __init__(self, local=None, nbytes: int | None = None,
+                 pacing: Pacing | None = None, key=None,
+                 max_m: int = 1 << 22):
+        if local is not None:
+            nbytes = local.nbytes if nbytes is None else nbytes
+            key = local.key if key is None else key
+        if nbytes is None:
+            raise ValueError("need nbytes (or a local set to infer it from)")
+        key = DEFAULT_KEY if key is None else key
+        self.nbytes = nbytes
+        self.pacing = pacing or Exponential(block=8, growth=2.0)
+        self.max_m = max_m
+        self.decoder = StreamDecoder(nbytes, local=local, key=key)
+        self.bytes_received = 0
+        self.remote_items: int | None = None
+
+    # -- state --------------------------------------------------------------
+    @property
+    def decoded(self) -> bool:
+        return self.decoder.decoded
+
+    @property
+    def symbols_received(self) -> int:
+        return self.decoder.symbols_received
+
+    @property
+    def symbols_used(self) -> int | None:
+        return self.decoder.decoded_at
+
+    # -- pull protocol ------------------------------------------------------
+    def request(self) -> tuple[int, int] | None:
+        """Next stream window [lo, hi) this session wants; None if done."""
+        if self.decoded:
+            return None
+        lo = self.symbols_received
+        if lo >= self.max_m:
+            raise RuntimeError(
+                f"reconciliation did not converge within {self.max_m} symbols")
+        return lo, min(lo + self.pacing.next_take(lo), self.max_m)
+
+    def offer(self, sym: CodedSymbols, start: int = 0) -> bool:
+        """Feed stream symbols [start, start+sym.m).  Windows must arrive in
+        order; overlap with already-consumed symbols is trimmed.  Returns
+        ``decoded``."""
+        have = self.symbols_received
+        if start > have:
+            raise ProtocolError(f"gap: expected window at {have}, got {start}")
+        if sym.nbytes != self.nbytes:
+            raise ProtocolError(f"geometry mismatch: ℓ={sym.nbytes}, "
+                                f"session ℓ={self.nbytes}")
+        if start < have:
+            if start + sym.m <= have:
+                return self.decoded          # wholly stale window
+            sym = sym.window(have - start)
+        return self.decoder.receive(sym)
+
+    def offer_bytes(self, data: bytes) -> bool:
+        """Feed one wire frame (``encode_frames`` output).  Returns
+        ``decoded``."""
+        sym, n_items, start = decode_frames(data)
+        self.bytes_received += len(data)
+        self.remote_items = n_items
+        return self.offer(sym, start)
+
+    # -- outcome ------------------------------------------------------------
+    def result(self):
+        """(only_remote, only_local) as uint32 word arrays."""
+        return self.decoder.result()
+
+    def report(self) -> SessionReport:
+        only_remote, only_local = self.decoder.result()
+        return SessionReport(
+            only_remote=only_remote, only_local=only_local,
+            nbytes=self.nbytes,
+            symbols_used=self.symbols_used or self.symbols_received,
+            symbols_received=self.symbols_received,
+            bytes_received=self.bytes_received,
+            remote_items=self.remote_items)
+
+
+def run_session(stream: SymbolStream, session: Session,
+                wire: bool = False) -> SessionReport:
+    """Drive ``session`` to completion against ``stream``.
+
+    ``wire=True`` routes every window through the byte-level frame codec —
+    exactly what two networked peers would exchange.
+    """
+    while True:
+        win = session.request()
+        if win is None:
+            break
+        lo, hi = win
+        if wire:
+            session.offer_bytes(stream.frames(lo, hi))
+        else:
+            session.offer(stream.window(lo, hi), lo)
+    return session.report()

@@ -1,0 +1,99 @@
+"""Minimal stand-in for `hypothesis` when the real package is absent.
+
+Implements exactly what this suite uses — ``@given`` over
+``st.integers`` / ``st.floats`` / ``st.sampled_from`` (plus ``.map``) and
+``@settings(max_examples=..., deadline=...)`` — with deterministic
+per-test sampling (seeded by the test's qualified name) so failures
+reproduce.  The first two examples pin the strategy boundaries (all-min,
+all-max); the rest are random draws.  Install the real dependency
+(``pip install -r requirements-dev.txt``) for true property-based
+shrinking and coverage; `tests/conftest.py` only activates this shim as an
+import-time fallback.
+"""
+from __future__ import annotations
+
+import inspect
+import random
+import sys
+import types
+
+_DEFAULT_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, sample, lo=None, hi=None):
+        self._sample = sample
+        self._lo = lo              # boundary examples (None -> sampled)
+        self._hi = hi
+
+    def example(self, rng, phase: int):
+        if phase == 0 and self._lo is not None:
+            return self._lo
+        if phase == 1 and self._hi is not None:
+            return self._hi
+        return self._sample(rng)
+
+    def map(self, fn):
+        return _Strategy(lambda rng: fn(self._sample(rng)),
+                         None if self._lo is None else fn(self._lo),
+                         None if self._hi is None else fn(self._hi))
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                     min_value, max_value)
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value),
+                     min_value, max_value)
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: rng.choice(elements),
+                     elements[0], elements[-1])
+
+
+def given(*strategies, **kw_strategies):
+    def deco(fn):
+        def wrapper():
+            n = getattr(wrapper, "_shim_max_examples", _DEFAULT_EXAMPLES)
+            rng = random.Random(f"{fn.__module__}.{fn.__name__}")
+            for phase in range(n):
+                args = [s.example(rng, phase) for s in strategies]
+                kwargs = {k: s.example(rng, phase)
+                          for k, s in kw_strategies.items()}
+                fn(*args, **kwargs)
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        # empty signature: pytest must not mistake strategy args for fixtures
+        wrapper.__signature__ = inspect.Signature()
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+    return deco
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_ignored):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def install() -> None:
+    """Register shim modules as `hypothesis` / `hypothesis.strategies`."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.HealthCheck = types.SimpleNamespace(too_slow=None, filter_too_much=None)
+    mod.__is_shim__ = True
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.floats = floats
+    st.sampled_from = sampled_from
+    mod.strategies = st
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

@@ -46,8 +46,8 @@ def test_compression_in_train_step_still_learns():
     from repro.models import build_model
     from repro.train.loop import (init_train_state, make_opt_config,
                                   make_train_step)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_local_mesh
+    mesh = make_local_mesh()
     cfg = smoke_config("starcoder2-3b")
     model = build_model(cfg, mesh)
     opt_cfg = make_opt_config(cfg, total_steps=10)
@@ -71,8 +71,8 @@ def test_microbatch_accumulation_matches_single():
     from repro.models import build_model
     from repro.train.loop import (init_train_state, make_opt_config,
                                   make_train_step)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_local_mesh
+    mesh = make_local_mesh()
     cfg = smoke_config("qwen3-4b")
     model = build_model(cfg, mesh)
     opt_cfg = make_opt_config(cfg, total_steps=10)

@@ -1,0 +1,145 @@
+"""Wire codec (paper §6): vectorized frame/stream codecs, nonzero-start
+windows, raw-stream decoding, loop/vectorized equivalence."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CodedSymbols, Encoder, StreamDecoder, encode
+from repro.core.hashing import bytes_to_words
+from repro.core.wire import (decode_frames, decode_frames_loop, decode_stream,
+                             encode_frames, encode_frames_loop, encode_stream,
+                             varint_count_bytes)
+
+RNG = np.random.default_rng(2718)
+
+
+def rand_items(n, nbytes, tag=None):
+    out = RNG.integers(0, 256, size=(n, nbytes), dtype=np.uint8)
+    if tag is not None:
+        out[:, 0] = tag
+    return out
+
+
+def assert_symbols_equal(a: CodedSymbols, b: CodedSymbols):
+    np.testing.assert_array_equal(a.sums, b.sums)
+    np.testing.assert_array_equal(a.checks, b.checks)
+    np.testing.assert_array_equal(a.counts, b.counts)
+
+
+# ------------------------------------------------------------- frames ----
+def test_frame_roundtrip_start_zero():
+    sym = encode(rand_items(400, 20), 20, 128)
+    blob = encode_frames(sym)
+    back, n, start = decode_frames(blob)
+    assert (n, start) == (400, 0)
+    assert_symbols_equal(back, sym)
+
+
+def test_frame_roundtrip_nonzero_start():
+    """A mid-stream window is self-describing: the receiver reconstructs
+    counts from the (n_items, start) carried in the frame header."""
+    sym = encode(rand_items(1000, 16), 16, 256)
+    for lo, hi in ((1, 2), (7, 64), (100, 256)):
+        blob = encode_frames(sym.window(lo, hi), start=lo, n_items=1000)
+        back, n, start = decode_frames(blob)
+        assert (n, start) == (1000, lo)
+        assert_symbols_equal(back, sym.window(lo, hi))
+
+
+def test_frame_loop_and_vectorized_are_byte_identical():
+    sym = encode(rand_items(300, 13), 13, 200)   # ℓ=13: word-padding case
+    win = sym.window(32, 200)
+    assert encode_frames(win, 32, 300) == encode_frames_loop(win, 32, 300)
+    a, na, sa = decode_frames(encode_frames(win, 32, 300))
+    b, nb, sb = decode_frames_loop(encode_frames(win, 32, 300))
+    assert (na, sa) == (nb, sb) == (300, 32)
+    assert_symbols_equal(a, b)
+
+
+def test_frame_negative_counts_difference_stream():
+    """Zig-zag path: a difference stream has negative counts."""
+    common = rand_items(200, 16, tag=0)
+    sa = encode(np.concatenate([common, rand_items(5, 16, tag=1)]), 16, 64)
+    sb = encode(np.concatenate([common, rand_items(30, 16, tag=2)]), 16, 64)
+    diff = sa.subtract(sb)
+    assert (diff.counts < 0).any()
+    back, _, _ = decode_frames(encode_frames(diff, 0, 205))
+    assert_symbols_equal(back, diff)
+
+
+# ------------------------------------------------- legacy stream codec ----
+def test_decode_stream_nonzero_start():
+    """The decode_stream(data, start != 0) path: expected-count baseline
+    must follow the window offset."""
+    n = 5000
+    sym = encode(rand_items(n, 24), 24, 512)
+    for lo in (1, 33, 400):
+        blob = encode_stream(sym.window(lo, 512), start=lo, n_items=n)
+        back, got_n = decode_stream(blob, start=lo)
+        assert got_n == n
+        assert_symbols_equal(back, sym.window(lo, 512))
+        # decoding with the wrong start mis-reconstructs the counts
+        wrong, _ = decode_stream(blob, start=0)
+        assert not np.array_equal(wrong.counts, sym.counts[lo:])
+
+
+def test_stream_decoder_raw_stream():
+    """StreamDecoder(local=None) recovers the full set from its own wire
+    stream (no local subtraction — counts all +1)."""
+    items = rand_items(40, 16)
+    enc = Encoder(16)
+    enc.add_items(items)
+    dec = StreamDecoder(16, local=None)
+    m, step = 0, 16
+    while not dec.decoded:
+        blob = encode_frames(enc.window(m, m + step), start=m, n_items=40)
+        sym, _, start = decode_frames(blob)
+        assert start == m
+        dec.receive(sym)
+        m += step
+        assert m < 4096
+    got, other = dec.result()
+    assert other.shape[0] == 0
+    want = bytes_to_words(items, 16)
+    assert sorted(r.tobytes() for r in got) == sorted(r.tobytes() for r in want)
+
+
+# ----------------------------------------------------- property tests ----
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 120), st.integers(4, 33), st.integers(0, 50))
+def test_frame_roundtrip_property(m, nbytes, start):
+    """decode(encode(sym)) == sym for random geometry, including the varint
+    count deltas at arbitrary window offsets."""
+    n = RNG.integers(1, 500)
+    enc = Encoder(nbytes)
+    enc.add_items(rand_items(int(n), nbytes))
+    win = enc.window(start, start + m)
+    back, got_n, got_start = decode_frames(
+        encode_frames(win, start=start, n_items=int(n)))
+    assert (got_n, got_start) == (n, start)
+    assert_symbols_equal(back, win)
+
+
+def test_empty_window_frame_roundtrip():
+    empty = CodedSymbols.zeros(0, 16)
+    back, n, start = decode_frames(encode_frames(empty, start=7, n_items=9))
+    assert (back.m, n, start) == (0, 9, 7)
+    back2, n2 = decode_stream(encode_stream(empty))
+    assert (back2.m, n2) == (0, 0)
+
+
+def test_nonzero_start_requires_n_items():
+    sym = encode(rand_items(10, 16), 16, 32)
+    with pytest.raises(ValueError, match="n_items"):
+        encode_frames(sym.window(4, 32), start=4)
+
+
+def test_varint_count_bytes_matches_encoding():
+    """wire_bytes() accounting equals the actual encoded size."""
+    n = 3000
+    sym = encode(rand_items(n, 16), 16, 256)
+    blob = encode_frames(sym)
+    body_counts = len(blob) - 24 - 256 * (16 + 8)
+    assert body_counts == varint_count_bytes(sym.counts, n, 0)
+    # §6 claim: ~1 byte amortized per symbol
+    assert body_counts / 256 <= 2.0
