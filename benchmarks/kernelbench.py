@@ -1,9 +1,11 @@
-"""Device-encoder microbench (framework-side, not a paper figure).
+"""Device encode/decode microbench (framework-side, not a paper figure).
 
-Times the two Pallas kernels in interpret mode (functional check only —
-interpret timings are NOT device timings; real perf analysis for the TPU
-target lives in EXPERIMENTS.md §Roofline/§Perf where we reason from the
-lowered HLO) and the host encoder they are validated against.
+Times the device pipelines on this host (functional check only — CPU
+timings are NOT device timings; real perf analysis for the TPU target
+lives in EXPERIMENTS.md §Roofline/§Perf where we reason from the lowered
+HLO) and the host encoder/decoder they are validated against.  The decode
+entries time the wave-peeling ref engine twice: cold (per-shape-bucket jit
+compile included) and warm (the steady-state a stream decoder sees).
 """
 from __future__ import annotations
 
@@ -17,8 +19,10 @@ ITEM_WORDS = 2  # 8-byte items, as in paper §7.2
 def main(quick: bool = True):
     import jax.numpy as jnp
 
-    from repro.core.encoder import encode
-    from repro.kernels.ops import encode_device
+    from repro.core.decoder import peel
+    from repro.core.encoder import Encoder, encode
+    from repro.kernels.ops import (decode_device, encode_device,
+                                   host_symbols_to_device)
 
     n, m = (2048, 512) if quick else (16384, 4096)
     items = np.random.default_rng(1).integers(
@@ -33,6 +37,29 @@ def main(quick: bool = True):
                    repeat=1)
     emit(f"device_encode_interpret_n{n}_m{m}", dt * 1e6,
          "(interpret-mode functional check, not TPU timing)")
+
+    # -- decode: difference of two sets, d items recoverable within m ------
+    d = m // 4
+    nbytes = 4 * ITEM_WORDS
+    A, B = Encoder(nbytes), Encoder(nbytes)
+    A.add_items(items)
+    B.add_items(items[:-d])
+    diff = A.symbols(m).subtract(B.symbols(m))
+
+    dt, res = timeit(lambda: peel(diff), repeat=2)
+    assert res.success
+    emit(f"host_peel_d{d}_m{m}", dt * 1e6,
+         f"rounds={res.rounds} us_per_item={dt * 1e6 / d:.1f}")
+
+    dev = host_symbols_to_device(diff)
+    dt_cold, res = timeit(
+        lambda: decode_device(*dev, nbytes=nbytes), repeat=1)
+    assert res.success
+    emit(f"device_decode_cold_d{d}_m{m}", dt_cold * 1e6,
+         "(ref engine, includes jit compile)")
+    dt_warm, _ = timeit(lambda: decode_device(*dev, nbytes=nbytes), repeat=2)
+    emit(f"device_decode_warm_d{d}_m{m}", dt_warm * 1e6,
+         f"waves={res.rounds} us_per_item={dt_warm * 1e6 / d:.1f}")
 
 
 if __name__ == "__main__":

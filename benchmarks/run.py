@@ -6,11 +6,15 @@
 ``python -m benchmarks.run --roofline`` include roofline table rendering
                                         (requires dry-run artifacts)
 
-Output: ``name,us_per_call,derived`` CSV on stdout.
+Output: ``name,us_per_call,derived`` CSV on stdout.  When the kernel suite
+runs, its entries (encode + decode) are additionally written to
+``BENCH_kernels.json`` as a machine-readable ``{name: µs}`` map so CI can
+record the perf trajectory.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -36,20 +40,34 @@ def main() -> None:
         ("kernelbench", kernelbench),  # device-encoder kernel (framework)
         ("wirebench", wirebench),    # §6 wire codec: vectorized vs loop
     ]
+    from .common import RESULTS
+    failed = []
     for name, mod in suites:
         if args.only and args.only not in name:
             continue
         print(f"# === {name} ===", flush=True)
         t0 = time.time()
+        before = set(RESULTS)
         try:
             mod.main(quick=not args.full)
         except Exception as e:  # keep the suite going; report the failure
             print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)
+            failed.append(name)
         print(f"# === {name} done in {time.time() - t0:.1f}s ===", flush=True)
-
-    if args.roofline:
+        if name == "kernelbench" and name not in failed:
+            entries = {k: round(v, 2) for k, v in RESULTS.items()
+                       if k not in before}
+            with open("BENCH_kernels.json", "w") as f:
+                json.dump(entries, f, indent=2, sort_keys=True)
+            print(f"# wrote BENCH_kernels.json ({len(entries)} entries)",
+                  flush=True)
+    if args.roofline:  # independent of suite outcomes — render before exit
         from . import roofline
         roofline.main()
+
+    if failed:  # exit nonzero so CI smoke steps actually catch breakage
+        print(f"# FAILED suites: {', '.join(failed)}", flush=True)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

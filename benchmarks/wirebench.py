@@ -22,21 +22,20 @@ def main(quick: bool = True):
         sym = encode(items, nbytes, m)
         blob = encode_frames(sym)
         assert blob == encode_frames_loop(sym)  # identical wire format
+        times = {}
         for name, fn, arg in (
                 ("enc_vec", encode_frames, sym),
                 ("enc_loop", encode_frames_loop, sym),
                 ("dec_vec", decode_frames, blob),
                 ("dec_loop", decode_frames_loop, blob)):
             t, _ = timeit(fn, arg, repeat=repeat)
+            times[name] = t
             emit(f"wire_{name}_l{nbytes}", t / m * 1e6,
                  f"{m / t / 1e6:.2f}Msym/s bytes/sym="
                  f"{len(blob) / m:.1f}")
-        t_v, _ = timeit(encode_frames, sym, repeat=repeat)
-        t_l, _ = timeit(encode_frames_loop, sym, repeat=repeat)
-        d_v, _ = timeit(decode_frames, blob, repeat=repeat)
-        d_l, _ = timeit(decode_frames_loop, blob, repeat=repeat)
         emit(f"wire_speedup_l{nbytes}", 0.0,
-             f"encode {t_l / t_v:.0f}x decode {d_l / d_v:.0f}x "
+             f"encode {times['enc_loop'] / times['enc_vec']:.0f}x "
+             f"decode {times['dec_loop'] / times['dec_vec']:.0f}x "
              f"(vectorized over loop)")
 
 

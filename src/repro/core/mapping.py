@@ -91,6 +91,29 @@ def advance_np(idx, state, limit):
         state[active] = nstate
 
 
+def walk_chains(nxt, state, hi, visit=None):
+    """Advance every chain position in place until ``nxt >= hi``.
+
+    ``visit(live, idx)`` is called per round with the still-walking row
+    selector and their current mapped indices (e.g. to XOR-accumulate a
+    removal).  Returns the concatenation of all visited indices — the rows
+    a decoder must re-test for purity.
+    """
+    touched = []
+    while True:
+        live = np.flatnonzero(nxt < hi)
+        if live.size == 0:
+            break
+        idx = nxt[live]
+        touched.append(idx.copy())
+        if visit is not None:
+            visit(live, idx)
+        nn, ns = _jump_np(idx, state[live])
+        nxt[live] = nn
+        state[live] = ns
+    return np.concatenate(touched) if touched else np.zeros(0, np.int64)
+
+
 def item_indices_np(seed: int, m: int) -> np.ndarray:
     """All mapped indices < m for one item (exact chain).  int64 array."""
     out = []

@@ -5,14 +5,22 @@ symbols index-wise and peels as symbols arrive, terminating as soon as
 symbol 0 empties (ρ(0)=1 ⇒ it is decoded last).  Already-recovered items are
 XOR-ed out of newly arriving symbols by extending their mapping chains — the
 decoder mirror of the encoder's incrementality.
+
+With ``backend="device"`` the per-window peel runs through the
+:mod:`repro.kernels.peel` wave decoder instead of the numpy loop: the
+residual prefix goes to the device, recovered items and the peeled residual
+come back, and the host keeps only the chain bookkeeping that extends
+recovered items into future windows.  Both engines maintain the identical
+``work``/recovered state, so the backend can be switched between windows.
 """
 from __future__ import annotations
 
 import numpy as np
 
+from .decoder import resolve_backend
 from .encoder import Encoder, _xor_accumulate
 from .hashing import DEFAULT_KEY, siphash24
-from .mapping import _jump_np, map_seeds
+from .mapping import map_seeds, walk_chains
 from .symbols import CodedSymbols
 
 
@@ -21,13 +29,20 @@ class StreamDecoder:
 
     ``local`` is Bob's encoder for his set B (its prefix is extended in lock
     step and subtracted).  Pass ``local=None`` to decode a raw set stream.
+    ``backend``: "host" | "device" | "auto" peel engine; ``max_diff`` bounds
+    the device decoder's fixed recovered-item buffers (the default — the
+    prefix length — cannot overflow, since a peel recovers at most one
+    item per symbol; see :func:`repro.kernels.ops.decode_device`).
     """
 
     def __init__(self, nbytes: int, local: Encoder | None = None,
-                 key=DEFAULT_KEY):
+                 key=DEFAULT_KEY, backend: str = "host",
+                 max_diff: int | None = None):
         self.nbytes = nbytes
         self.key = key
         self.local = local
+        self.backend = resolve_backend(backend)
+        self.max_diff = max_diff
         self.work = CodedSymbols.zeros(0, nbytes)
         self.rec_items = np.zeros((0, (nbytes + 3) // 4), np.uint32)
         self.rec_hashes = np.zeros(0, np.uint64)
@@ -57,7 +72,10 @@ class StreamDecoder:
         # extend recovered items' chains through the new rows
         self._walk(self.rec_items, self.rec_hashes, self.rec_sides,
                    self._rnext, self._rstate, m)
-        self._peel(np.arange(old, m, dtype=np.int64))
+        if self.backend == "device":
+            self._peel_device(old, m)
+        else:
+            self._peel(np.arange(old, m, dtype=np.int64))
         done = self.decoded
         if done and self.decoded_at is None:
             self.decoded_at = self.symbols_received
@@ -65,19 +83,12 @@ class StreamDecoder:
 
     # ------------------------------------------------------------------
     def _walk(self, items, hashes, sides, nxt, state, hi):
-        touched = []
-        while True:
-            live = np.flatnonzero(nxt < hi)
-            if live.size == 0:
-                return np.concatenate(touched) if touched else np.zeros(0, np.int64)
-            idx = nxt[live]
-            touched.append(idx.copy())
-            _xor_accumulate(self.work.sums, self.work.checks, self.work.counts,
-                            idx, items[live], hashes[live],
+        def remove(live, idx):
+            _xor_accumulate(self.work.sums, self.work.checks,
+                            self.work.counts, idx, items[live], hashes[live],
                             -sides[live].astype(np.int64))
-            nn, ns = _jump_np(idx, state[live])
-            nxt[live] = nn
-            state[live] = ns
+
+        return walk_chains(nxt, state, hi, remove)
 
     def _peel(self, cand: np.ndarray) -> None:
         m = self.work.m
@@ -106,6 +117,35 @@ class StreamDecoder:
             self.rec_sides = np.concatenate([self.rec_sides, sides])
             self._rnext = np.concatenate([self._rnext, nxt])
             self._rstate = np.concatenate([self._rstate, state])
+
+    def _peel_device(self, old: int, m: int) -> None:
+        """Wave-peel the whole residual prefix on device and merge.
+
+        ``self.work`` already has previously recovered items removed, so
+        the device decoder starts from a clean residual; it returns the
+        newly recovered items plus the peeled residual, and the host walks
+        each new item's chain to its first index ≥ m so later windows keep
+        extending it (`_walk`).  A ``max_diff`` overflow falls back to the
+        exact host peel for this window.
+        """
+        from repro.kernels.ops import decode_device, host_symbols_to_device
+        res = decode_device(*host_symbols_to_device(self.work),
+                            nbytes=self.nbytes, key=self.key,
+                            max_diff=self.max_diff)
+        if res.overflow:
+            self._peel(np.arange(old, m, dtype=np.int64))
+            return
+        if res.items.shape[0] == 0:
+            return
+        self.work = res.residual
+        nxt = np.zeros(res.items.shape[0], np.int64)
+        state = map_seeds(res.items, self.key, self.nbytes).copy()
+        walk_chains(nxt, state, m)   # position each chain at first idx >= m
+        self.rec_items = np.concatenate([self.rec_items, res.items])
+        self.rec_hashes = np.concatenate([self.rec_hashes, res.hashes])
+        self.rec_sides = np.concatenate([self.rec_sides, res.sides])
+        self._rnext = np.concatenate([self._rnext, nxt])
+        self._rstate = np.concatenate([self._rstate, state])
 
     # ------------------------------------------------------------------
     def result(self):

@@ -18,19 +18,17 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.hashing import map_key, siphash24_pair
 from repro.core.mapping import _jump_j
+
+from .common import checksum_and_seed
 
 
 def _kernel(items_ref, idx_ref, chk_ref, *, K: int, m: int, nbytes: int,
-            key, mkey):
+            key):
     items = items_ref[...]                       # (BN, L) uint32
-    chk_hi, chk_lo = siphash24_pair(items, key, nbytes)
-    seed_hi, seed_lo = siphash24_pair(items, mkey, nbytes)
-    seed_lo = seed_lo | jnp.uint32(1)            # nonzero xorshift state
+    chk_hi, chk_lo, h, l = checksum_and_seed(items, key, nbytes)
     chk_ref[...] = jnp.stack([chk_hi, chk_lo], axis=1)
     idx = jnp.zeros(items.shape[0], dtype=jnp.int32)
-    h, l = seed_hi, seed_lo
     cols = []
     for _ in range(K):
         cols.append(idx)
@@ -52,8 +50,7 @@ def map_indices(items, *, K: int, m: int, nbytes: int, key,
     n, L = items.shape
     assert n % block_n == 0, (n, block_n)
     grid = (n // block_n,)
-    kernel = functools.partial(_kernel, K=K, m=m, nbytes=nbytes, key=key,
-                               mkey=map_key(key))
+    kernel = functools.partial(_kernel, K=K, m=m, nbytes=nbytes, key=key)
     return pl.pallas_call(
         kernel,
         grid=grid,

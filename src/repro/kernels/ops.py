@@ -1,12 +1,16 @@
-"""Public device-encoder API: pad → map_indices kernel → iblt_encode kernel.
+"""Public device API: the encoder and decoder pipelines around the kernels.
 
-``encode_device`` is the TPU-native counterpart of ``repro.core.encode`` and
-produces bit-identical coded symbols (tested in tests/test_kernels.py).
-``interpret=None`` auto-selects: real kernels on TPU, interpret mode on CPU.
+``encode_device`` (pad → map_indices → iblt_encode) is the TPU-native
+counterpart of ``repro.core.encode`` and produces bit-identical coded
+symbols; ``decode_device`` (pad → wave peeling, :mod:`kernels.peel`) is the
+counterpart of ``repro.core.peel`` and recovers the identical difference.
+``interpret=None`` auto-selects: real kernels on TPU, interpret mode on CPU
+(where the pure-jnp "ref" engines are used — the Pallas interpreter pays
+~10 ms/op; the kernels themselves are validated in tests at small sizes).
 """
 from __future__ import annotations
 
-import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -17,6 +21,7 @@ from repro.core.mapping import kmax
 
 from .iblt_encode import iblt_encode
 from .map_indices import map_indices
+from .peel import peel_waves
 
 
 def _auto_interpret(interpret):
@@ -60,18 +65,27 @@ def encode_device(items, *, m: int, nbytes: int | None = None,
         mapping = "ref" if interpret else "pallas"
 
     def run(items_padded):
+        # mask first, map second: pad rows are zero items whose mappings
+        # must never be computed into the symbols (idx := m kills a row).
+        n_pad = items_padded.shape[0] - n0
         if mapping == "pallas":
+            # the kernel needs whole blocks — map everything, mask the pads
             idxs, chks = map_indices(items_padded, K=K, m=m, nbytes=nbytes,
                                      key=key, block_n=block_n,
                                      interpret=interpret)
+            if n_pad:
+                pad_rows = jnp.arange(items_padded.shape[0]) >= n0
+                idxs = jnp.where(pad_rows[:, None], jnp.int32(m), idxs)
         else:
+            # the jnp chain has no block constraint — skip pad rows entirely
             from .ref import map_indices_ref
-            idxs, chks = map_indices_ref(items_padded, K=K, m=m,
+            idxs, chks = map_indices_ref(items_padded[:n0], K=K, m=m,
                                          nbytes=nbytes, key=key)
-        if items_padded.shape[0] != n0:
-            # padding rows are zero items — kill their mappings (idx := m)
-            rows = jnp.arange(items_padded.shape[0]) >= n0
-            idxs = jnp.where(rows[:, None], jnp.int32(m), idxs)
+            if n_pad:
+                idxs = jnp.concatenate(
+                    [idxs, jnp.full((n_pad, K), m, jnp.int32)])
+                chks = jnp.concatenate(
+                    [chks, jnp.zeros((n_pad, 2), jnp.uint32)])
         sums, checks, counts = iblt_encode(items_padded, idxs, chks, m=m,
                                            block_m=block_m, block_n=block_n,
                                            interpret=interpret)
@@ -87,9 +101,108 @@ def encode_device(items, *, m: int, nbytes: int | None = None,
 def device_symbols_to_host(sums, checks, counts, nbytes: int):
     """Convert device output to a host CodedSymbols (checks -> uint64)."""
     from repro.core.symbols import CodedSymbols
-    sums = np.asarray(sums, dtype=np.uint32)
+    # np.array (not asarray): jax arrays convert to read-only views, but
+    # CodedSymbols buffers are mutated in place by the host decoders.
+    sums = np.array(sums, dtype=np.uint32)
     checks = np.asarray(checks, dtype=np.uint32)
     counts = np.asarray(counts)
     c64 = (checks[:, 0].astype(np.uint64) << np.uint64(32)) | \
         checks[:, 1].astype(np.uint64)
     return CodedSymbols(sums, c64, counts.astype(np.int64), nbytes)
+
+
+def host_symbols_to_device(sym):
+    """CodedSymbols -> (sums (m, L) u32, checks (m, 2) u32, counts (m,) i32),
+    the device layout (uint64 checksums split into (hi, lo) word pairs).
+    Inverse of :func:`device_symbols_to_host` (tested round-trip)."""
+    checks = np.empty((sym.m, 2), np.uint32)
+    checks[:, 0] = (sym.checks >> np.uint64(32)).astype(np.uint32)
+    checks[:, 1] = (sym.checks & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    return (jnp.asarray(sym.sums, jnp.uint32), jnp.asarray(checks),
+            jnp.asarray(sym.counts.astype(np.int32)))
+
+
+class DeviceDecodeResult(NamedTuple):
+    """Host-materialized outcome of :func:`decode_device`."""
+    items: np.ndarray     # (r, L) uint32 — recovered source symbols
+    hashes: np.ndarray    # (r,) uint64   — their checksums
+    sides: np.ndarray     # (r,) int8     — +1 remote-only, -1 local-only
+    success: bool         # all symbols emptied (difference fully recovered)
+    overflow: bool        # max_diff exceeded — decode stopped mid-peel
+    rounds: int           # peel waves executed
+    residual: object      # CodedSymbols — symbols after all removals
+
+
+def decode_device(sums, checks, counts, *, nbytes: int, key=DEFAULT_KEY,
+                  max_diff: int | None = None, max_rounds: int = 10_000,
+                  K: int | None = None, block_n: int = 256,
+                  block_m: int = 256, interpret: bool | None = None,
+                  kernel: str | None = None) -> DeviceDecodeResult:
+    """Wave-peel difference symbols on device (paper §3 decode).
+
+    Inputs are device-layout difference symbols — sums (m, L) uint32,
+    checks (m, 2) uint32, counts (m,) int32, e.g. from
+    :func:`host_symbols_to_device` or an ``encode_device`` subtraction.
+
+    ``max_diff`` bounds the fixed-shape recovered-item buffers; it defaults
+    to the tile-padded prefix length (≥ m), which can never overflow:
+    recovering an item permanently empties the symbol it was pure at (the
+    item was that symbol's whole content), so even a partial decode
+    recovers at most m items.  A tighter bound trades buffer size for a possible
+    ``overflow=True`` outcome — the decode stops with the overflowing wave
+    unapplied (items/residual cover only the completed waves) and the
+    caller should fall back to the host decoder.
+
+    ``kernel``: "pallas" (purity/map/apply kernels) or "ref" (pure jnp).
+    Defaults to pallas on TPU, ref on CPU-interpret — same policy and
+    rationale as :func:`encode_device`.  On TPU the whole wave loop stages
+    into one jit program under ``jax.lax.while_loop``; chains are truncated
+    at ``kmax(m)`` like the device encoder (< 1e-12 probability).
+    """
+    interpret = _auto_interpret(interpret)
+    if kernel is None:
+        kernel = "ref" if interpret else "pallas"
+    sums = jnp.asarray(sums, jnp.uint32)
+    m, L = sums.shape
+    if nbytes is None:
+        nbytes = 4 * L
+    if m == 0:
+        from repro.core.symbols import CodedSymbols
+        return DeviceDecodeResult(
+            np.zeros((0, L), np.uint32), np.zeros(0, np.uint64),
+            np.zeros(0, np.int8), True, False, 0,
+            CodedSymbols.zeros(0, nbytes))
+    mp = ((m + block_m - 1) // block_m) * block_m
+    # defaults quantize to the tile bucket (mp ≥ m) so a growing stream
+    # prefix re-uses one compiled program per bucket
+    if K is None:
+        K = kmax(mp)
+    D = mp if max_diff is None else max(int(max_diff), 1)
+    checks = jnp.asarray(checks, jnp.uint32)
+    counts = jnp.asarray(counts, jnp.int32)
+
+    def run(sums, checks, counts):
+        sums = jnp.pad(sums, ((0, mp - m), (0, 0)))
+        checks = jnp.pad(checks, ((0, mp - m), (0, 0)))
+        counts = jnp.pad(counts, (0, mp - m))[:, None]
+        return peel_waves(sums, checks, counts, m=m, nbytes=nbytes, key=key,
+                          max_diff=D, K=K, max_rounds=max_rounds,
+                          kernel=kernel, block_m=block_m, block_n=block_n,
+                          interpret=interpret,
+                          use_while_loop=not interpret)
+
+    if not interpret:
+        run = jax.jit(run)
+    state, success = run(sums, checks, counts)
+
+    n_rec = int(state.n_rec)
+    items = np.asarray(state.rec_items)[:n_rec]
+    rchk = np.asarray(state.rec_checks)[:n_rec]
+    hashes = (rchk[:, 0].astype(np.uint64) << np.uint64(32)) | \
+        rchk[:, 1].astype(np.uint64)
+    sides = np.asarray(state.rec_sides)[:n_rec].astype(np.int8)
+    residual = device_symbols_to_host(
+        state.sums[:m], state.checks[:m], state.counts[:m, 0], nbytes)
+    return DeviceDecodeResult(items, hashes, sides, bool(success),
+                              bool(state.overflow), int(state.rounds),
+                              residual)

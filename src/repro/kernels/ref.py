@@ -9,21 +9,20 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.hashing import map_key, siphash24_pair
 from repro.core.mapping import _jump_j
+
+from .common import checksum_and_seed
 
 
 def map_indices_ref(items, *, K: int, m: int, nbytes: int, key):
-    chk_hi, chk_lo = siphash24_pair(items, key, nbytes)
-    seed_hi, seed_lo = siphash24_pair(items, map_key(key), nbytes)
-    seed_lo = seed_lo | jnp.uint32(1)
+    chk_hi, chk_lo, h, l = checksum_and_seed(items, key, nbytes)
     idx = jnp.zeros(items.shape[0], dtype=jnp.int32)
-    h, l = seed_hi, seed_lo
+    msat = jnp.asarray(m, jnp.int32)     # m may be traced (peel stages)
     cols = []
     for _ in range(K):
         cols.append(idx)
         nidx, h, l = _jump_j(idx, h, l)
-        idx = jnp.minimum(nidx, jnp.int32(m))
+        idx = jnp.minimum(nidx, msat)
     return jnp.stack(cols, axis=1), jnp.stack([chk_hi, chk_lo], axis=1)
 
 
@@ -55,6 +54,35 @@ def iblt_encode_ref(items, idxs, chks, *, m: int):
     seg_i = jax.ops.segment_sum(bits_i, tgt, num_segments=m + 1)[:m]
     seg_c = jax.ops.segment_sum(bits_c, tgt, num_segments=m + 1)[:m]
     counts = jax.ops.segment_sum(valid, tgt, num_segments=m + 1)[:m]
+    sums = _pack_bits(seg_i % 2, L)
+    checks = _pack_bits(seg_c % 2, 2)
+    return sums, checks, counts[:, None]
+
+
+def iblt_apply_ref(items, idxs, chks, sides, *, m, m_out: int | None = None):
+    """Signed XOR-scatter oracle for the peel kernel's chain removal.
+
+    Like :func:`iblt_encode_ref` but counts accumulate ``sides`` (int32,
+    0 disables a row) instead of +1, and the segment count ``m_out`` may
+    exceed the true ``m`` (rows [m, m_out) stay zero) so the caller can keep
+    tile-padded symbol state.  ``m`` may be a traced scalar.
+    """
+    n, L = items.shape
+    K = idxs.shape[1]
+    if m_out is None:
+        m_out = int(m)
+    flat = idxs.reshape(-1)
+    valid = (flat < m).astype(jnp.int32)
+    rep_items = jnp.repeat(items, K, axis=0)
+    rep_chks = jnp.repeat(chks, K, axis=0)
+    rep_sides = jnp.repeat(sides.astype(jnp.int32), K)
+    tgt = jnp.where(flat < m, flat, m_out)
+    bits_i = _unpack_bits(rep_items) * valid[:, None]
+    bits_c = _unpack_bits(rep_chks) * valid[:, None]
+    seg_i = jax.ops.segment_sum(bits_i, tgt, num_segments=m_out + 1)[:m_out]
+    seg_c = jax.ops.segment_sum(bits_c, tgt, num_segments=m_out + 1)[:m_out]
+    counts = jax.ops.segment_sum(valid * rep_sides, tgt,
+                                 num_segments=m_out + 1)[:m_out]
     sums = _pack_bits(seg_i % 2, L)
     checks = _pack_bits(seg_c % 2, 2)
     return sums, checks, counts[:, None]

@@ -78,11 +78,16 @@ class Session:
     pacing: window schedule (default: the doubling schedule the old
         ``reconcile_sets`` loop used).
     max_m: abort bound on stream consumption.
+    backend: "host" | "device" | "auto" peel engine (see
+        :mod:`repro.core.decoder`); "device" wave-peels each window through
+        the Pallas decoder, with host fallback on ``max_diff`` overflow.
+    max_diff: recovered-item buffer bound for the device engine.
     """
 
     def __init__(self, local=None, nbytes: int | None = None,
                  pacing: Pacing | None = None, key=None,
-                 max_m: int = 1 << 22):
+                 max_m: int = 1 << 22, backend: str = "host",
+                 max_diff: int | None = None):
         if local is not None:
             nbytes = local.nbytes if nbytes is None else nbytes
             key = local.key if key is None else key
@@ -92,11 +97,22 @@ class Session:
         self.nbytes = nbytes
         self.pacing = pacing or Exponential(block=8, growth=2.0)
         self.max_m = max_m
-        self.decoder = StreamDecoder(nbytes, local=local, key=key)
+        self.decoder = StreamDecoder(nbytes, local=local, key=key,
+                                     backend=backend, max_diff=max_diff)
         self.bytes_received = 0
         self.remote_items: int | None = None
 
     # -- state --------------------------------------------------------------
+    @property
+    def backend(self) -> str:
+        return self.decoder.backend
+
+    def set_backend(self, backend: str) -> None:
+        """Switch the peel engine; safe between windows (both engines keep
+        the identical decoder state)."""
+        from repro.core.decoder import resolve_backend
+        self.decoder.backend = resolve_backend(backend)
+
     @property
     def decoded(self) -> bool:
         return self.decoder.decoded
@@ -161,12 +177,18 @@ class Session:
 
 
 def run_session(stream: SymbolStream, session: Session,
-                wire: bool = False) -> SessionReport:
+                wire: bool = False,
+                backend: str | None = None) -> SessionReport:
     """Drive ``session`` to completion against ``stream``.
 
     ``wire=True`` routes every window through the byte-level frame codec —
-    exactly what two networked peers would exchange.
+    exactly what two networked peers would exchange.  ``backend`` switches
+    the session's peel engine ("host" | "device" | "auto") before driving
+    it; like :meth:`Session.set_backend`, the switch persists on the
+    session afterwards.
     """
+    if backend is not None:
+        session.set_backend(backend)
     while True:
         win = session.request()
         if win is None:

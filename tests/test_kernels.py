@@ -8,13 +8,15 @@ import jax.numpy as jnp
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.encoder import encode
+from repro.core.encoder import Encoder, encode
 from repro.core.hashing import DEFAULT_KEY
 from repro.core.mapping import indices_matrix_np, kmax, map_seeds
 from repro.kernels.iblt_encode import iblt_encode
 from repro.kernels.map_indices import map_indices
-from repro.kernels.ops import device_symbols_to_host, encode_device
-from repro.kernels.ref import iblt_encode_ref, map_indices_ref
+from repro.kernels.ops import (decode_device, device_symbols_to_host,
+                               encode_device, host_symbols_to_device)
+from repro.kernels.peel import _purity_body, iblt_apply, purity_scan
+from repro.kernels.ref import iblt_apply_ref, iblt_encode_ref, map_indices_ref
 
 RNG = np.random.default_rng(4242)
 
@@ -130,3 +132,74 @@ def test_encode_device_ragged_n_padding():
     dev = device_symbols_to_host(s1, c1, n1, 8)
     np.testing.assert_array_equal(dev.sums, host.sums)
     np.testing.assert_array_equal(dev.counts, host.counts)
+
+
+@pytest.mark.parametrize("mapping", ["ref", "pallas"])
+def test_encode_device_padded_equals_unpadded(mapping):
+    """Regression: the same items encoded through a block size that needs
+    zero-padding and one that doesn't produce bit-identical symbols.
+    (K is truncated identically on both runs, so bit-equality holds even
+    at a small K that keeps the interpret-mode kernel cheap.)"""
+    items = jnp.asarray(rand_items(96, 2))
+    kw = dict(m=64, nbytes=8, K=8, block_m=64, mapping=mapping)
+    s_pad, c_pad, n_pad = encode_device(items, block_n=64, **kw)   # 96 -> 128
+    s_raw, c_raw, n_raw = encode_device(items, block_n=32, **kw)   # no pad
+    np.testing.assert_array_equal(np.asarray(s_pad), np.asarray(s_raw))
+    np.testing.assert_array_equal(np.asarray(c_pad), np.asarray(c_raw))
+    np.testing.assert_array_equal(np.asarray(n_pad), np.asarray(n_raw))
+
+
+# ----------------------------------------------------------------- peel --
+def _small_diff(d, L, m, seed=5):
+    rng = np.random.default_rng(seed)
+    pool = rng.integers(0, 2**32, size=(30 + d, L), dtype=np.uint32)
+    pool[:, 0] = np.arange(pool.shape[0])
+    A, B = Encoder(4 * L), Encoder(4 * L)
+    A.add_items(pool)
+    B.add_items(pool[:30])
+    return A.symbols(m).subtract(B.symbols(m))
+
+
+def test_purity_scan_kernel_vs_ref():
+    """Pallas purity kernel == pure-jnp purity over a real difference
+    (mix of pure, empty, and multi-item symbols, both signs)."""
+    sym = _small_diff(6, 2, 64)
+    sym.counts[:8] *= -1          # exercise negative sides too
+    sums, checks, counts = host_symbols_to_device(sym)
+    counts = counts[:, None]
+    kern = purity_scan(sums, checks, counts, key=DEFAULT_KEY, nbytes=8,
+                       block_m=64)
+    ref = _purity_body(sums, checks, counts, key=DEFAULT_KEY, nbytes=8)
+    np.testing.assert_array_equal(np.asarray(kern), np.asarray(ref))
+    assert int(np.sum(np.asarray(ref) != 0)) > 0   # scenario has pure rows
+
+
+def test_iblt_apply_kernel_vs_ref():
+    """Signed-removal kernel == bit-parity oracle, mixed ±1/0 sides."""
+    n, L, m, K = 64, 2, 64, 10
+    items = jnp.asarray(rand_items(n, L))
+    idxs, chks = map_indices_ref(items, K=K, m=m, nbytes=8, key=DEFAULT_KEY)
+    sides = jnp.asarray(RNG.integers(-1, 2, size=n, dtype=np.int32))
+    idxs = jnp.where(sides[:, None] != 0, idxs, jnp.int32(m))
+    ks, kc, kn = iblt_apply(items, idxs, chks, sides, m=m, block_m=64,
+                            block_n=64)
+    rs, rc, rn = iblt_apply_ref(items, idxs, chks, sides, m=m, m_out=64)
+    np.testing.assert_array_equal(np.asarray(ks)[:m], np.asarray(rs))
+    np.testing.assert_array_equal(np.asarray(kc)[:m], np.asarray(rc))
+    np.testing.assert_array_equal(np.asarray(kn)[:m], np.asarray(rn))
+
+
+def test_decode_device_pallas_engine_equals_ref_engine():
+    """Full wave loop through the Pallas kernels == the jnp ref engine,
+    wave for wave (same K so chain truncation is identical)."""
+    sym = _small_diff(3, 2, 64)
+    dev = host_symbols_to_device(sym)
+    kw = dict(nbytes=8, K=14, block_n=64, block_m=64)
+    rp = decode_device(*dev, kernel="pallas", **kw)
+    rr = decode_device(*dev, kernel="ref", **kw)
+    assert rp.success == rr.success and rp.rounds == rr.rounds
+    np.testing.assert_array_equal(rp.items, rr.items)
+    np.testing.assert_array_equal(rp.sides, rr.sides)
+    np.testing.assert_array_equal(rp.residual.sums, rr.residual.sums)
+    np.testing.assert_array_equal(rp.residual.checks, rr.residual.checks)
+    np.testing.assert_array_equal(rp.residual.counts, rr.residual.counts)

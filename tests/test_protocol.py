@@ -131,12 +131,16 @@ def test_identical_sets_decode_in_first_window():
 
 
 # ------------------------------------- acceptance: one stream, N peers ----
-def test_shared_stream_syncs_three_replicas_over_wire():
+@pytest.mark.parametrize("backend", ["host", "device"])
+def test_shared_stream_syncs_three_replicas_over_wire(backend):
     """≥3 replicas of different staleness sync from a SINGLE SymbolStream
     over the bytes-level wire path; every difference is recovered exactly
-    and overhead stays within the paper's 1.35–2x band at d ≥ 32."""
+    and overhead stays within the paper's 1.35–2x band at d ≥ 32.  The
+    device backend wave-peels every window through the kernels' decode
+    path and must land on the identical protocol trajectory."""
     nbytes = 16
-    state = rand_items(30_000, nbytes, tag=0)
+    n_state = 30_000 if backend == "host" else 6_000
+    state = rand_items(n_state, nbytes, tag=0)
     stream = SymbolStream.from_items(state, nbytes)   # the ONE peer encode
 
     staleness = (32, 80, 250)     # all d ≥ 32 → inside the measured band
@@ -147,7 +151,8 @@ def test_shared_stream_syncs_three_replicas_over_wire():
             [state[:-lost], rand_items(added, nbytes, tag=9)])
         replica = Sketch.from_items(replica_state, nbytes)
         session = Session(local=replica, pacing=FixedBlock(4))
-        rep = run_session(stream, session, wire=True)
+        rep = run_session(stream, session, wire=True, backend=backend)
+        assert session.backend == backend
         d = lost + added
         # exact recovery, both directions
         assert sorted(x.tobytes() for x in rep.only_remote_bytes()) == \
@@ -157,7 +162,7 @@ def test_shared_stream_syncs_three_replicas_over_wire():
         # paper overhead band (Fig. 4: 1.35–1.72 mean; 2x hard ceiling here)
         assert 1.0 <= rep.overhead(d) <= 2.0, \
             f"d={d}: overhead {rep.overhead(d):.2f}"
-        assert rep.bytes_received > 0 and rep.remote_items == 30_000
+        assert rep.bytes_received > 0 and rep.remote_items == n_state
         deepest = max(deepest, rep.symbols_received)
     # universality: ONE shared cache served everyone — it was extended to
     # exactly the deepest session's reach, never rebuilt per replica
