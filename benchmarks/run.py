@@ -6,10 +6,10 @@
 ``python -m benchmarks.run --roofline`` include roofline table rendering
                                         (requires dry-run artifacts)
 
-Output: ``name,us_per_call,derived`` CSV on stdout.  When the kernel suite
-runs, its entries (encode + decode) are additionally written to
-``BENCH_kernels.json`` as a machine-readable ``{name: µs}`` map so CI can
-record the perf trajectory.
+Output: ``name,us_per_call,derived`` CSV on stdout.  When the kernel or
+shard suites run, their entries are additionally written to
+``BENCH_kernels.json`` / ``BENCH_shards.json`` as machine-readable
+``{name: µs}`` maps so CI can record the perf trajectory.
 """
 from __future__ import annotations
 
@@ -28,8 +28,8 @@ def main() -> None:
                     help="render roofline table from dry-run artifacts")
     args = ap.parse_args()
 
-    from . import (alpha, itemsize, kernelbench, overhead, setsize, statesync,
-                   throughput, wirebench)
+    from . import (alpha, itemsize, kernelbench, overhead, setsize,
+                   shardbench, statesync, throughput, wirebench)
     suites = [
         ("overhead", overhead),      # Figs 4, 6
         ("throughput", throughput),  # Figs 7, 8
@@ -39,7 +39,10 @@ def main() -> None:
         ("alpha", alpha),            # Fig 14
         ("kernelbench", kernelbench),  # device-encoder kernel (framework)
         ("wirebench", wirebench),    # §6 wire codec: vectorized vs loop
+        ("shardbench", shardbench),  # sharded serving + batched decode
     ]
+    artifacts = {"kernelbench": "BENCH_kernels.json",
+                 "shardbench": "BENCH_shards.json"}
     from .common import RESULTS
     failed = []
     for name, mod in suites:
@@ -54,12 +57,12 @@ def main() -> None:
             print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)
             failed.append(name)
         print(f"# === {name} done in {time.time() - t0:.1f}s ===", flush=True)
-        if name == "kernelbench" and name not in failed:
+        if name in artifacts and name not in failed:
             entries = {k: round(v, 2) for k, v in RESULTS.items()
                        if k not in before}
-            with open("BENCH_kernels.json", "w") as f:
+            with open(artifacts[name], "w") as f:
                 json.dump(entries, f, indent=2, sort_keys=True)
-            print(f"# wrote BENCH_kernels.json ({len(entries)} entries)",
+            print(f"# wrote {artifacts[name]} ({len(entries)} entries)",
                   flush=True)
     if args.roofline:  # independent of suite outcomes — render before exit
         from . import roofline

@@ -1,0 +1,73 @@
+"""Sharded-serving sweep: reconcile one diff sharded S ∈ {1, 2, 4, 8} ways.
+
+For each shard count the sweep times the full merged-payload protocol loop
+(:func:`repro.protocol.run_sharded_session`) on the host backend, plus the
+batched device decode (`decode_device_batched` — the peel wave vmapped over
+the shard axis) cold (per-bucket jit compile included) and warm.  Derived
+columns record total symbols at decode and the overhead factor so the
+wire-cost side of sharding is tracked together with the time side.
+
+CPU numbers are functional-trajectory only (as everywhere in this repo);
+the serving target is TPU, where the batched decode is one fused program.
+``benchmarks/run.py`` snapshots the emitted entries into
+``BENCH_shards.json`` for the CI perf artifact.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import emit, make_sets, timeit
+
+NBYTES = 16
+SHARD_COUNTS = (1, 2, 4, 8)
+
+
+def main(quick: bool = True):
+    from repro.kernels.ops import decode_device_batched
+    from repro.protocol import FixedBlock, ShardedStream, run_sharded_session
+
+    n, d_lost, d_add = (3000, 160, 40) if quick else (50_000, 1600, 400)
+    d = d_lost + d_add
+    a_items, b_items, _, _ = make_sets(n, d_lost, d_add, NBYTES)
+
+    for S in SHARD_COUNTS:
+        stream = ShardedStream.from_items(a_items, NBYTES, n_shards=S)
+        local = ShardedStream.from_items(b_items, NBYTES, n_shards=S)
+
+        def sync():
+            return run_sharded_session(
+                stream, stream.session(local=local, pacing=FixedBlock(16)),
+                wire=True)
+
+        dt, rep = timeit(sync, repeat=2)
+        emit(f"shard_sync_host_S{S}_d{d}", dt * 1e6,
+             f"symbols={rep.symbols_used} overhead={rep.overhead(d):.2f} "
+             f"steps={rep.grow_steps} wire_B={rep.bytes_received}")
+
+        # batched device decode of the S residual prefixes in one call:
+        # reuse the host run's per-shard reach as realistic prefix lengths
+        shards = []
+        for s in range(S):
+            m_s = max(rep.shards[s].symbols_received, 8)
+            diff = stream.shards[s].window(0, m_s).subtract(
+                local.shards[s].encoder.symbols(m_s))
+            shards.append(diff)
+        # quick: a tight fixed-shape bound; full: the safe default (= the
+        # padded prefix, which can never overflow even at S=1)
+        max_diff = 256 if quick else None
+        dt_cold, res = timeit(
+            lambda: decode_device_batched(shards, nbytes=NBYTES,
+                                          max_diff=max_diff), repeat=1)
+        assert all(r.success for r in res), "batched decode must converge"
+        emit(f"shard_decode_batched_cold_S{S}_d{d}", dt_cold * 1e6,
+             "(ref engine, includes per-bucket jit compile)")
+        dt_warm, _ = timeit(
+            lambda: decode_device_batched(shards, nbytes=NBYTES,
+                                          max_diff=max_diff), repeat=2)
+        emit(f"shard_decode_batched_warm_S{S}_d{d}", dt_warm * 1e6,
+             f"waves={max(r.rounds for r in res)} "
+             f"us_per_item={dt_warm * 1e6 / d:.1f}")
+
+
+if __name__ == "__main__":
+    main()

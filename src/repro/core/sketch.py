@@ -1,14 +1,19 @@
-"""High-level Rateless IBLT API.
+"""Legacy one-call wrappers over the session protocol.
 
-    >>> from repro.core import Sketch, reconcile_sets
-    >>> a = Sketch.from_items(list_of_bytes_a, nbytes=32)
-    >>> b = Sketch.from_items(list_of_bytes_b, nbytes=32)
-    >>> only_a, only_b, m_used = reconcile_sets(a, b)
+The primary entry point is :mod:`repro.protocol` — ``SymbolStream`` /
+``Session`` / ``run_session`` (and their sharded counterparts) — which is
+what ``reconcile_sets`` delegates to::
 
-`reconcile_sets` runs the live protocol: A's universal stream is pulled in
-growing windows by a `repro.protocol.Session` holding B, which stops at
-decode (symbol 0 empties).  For multiple peers, pacing control, or the
-bytes-on-the-wire path, use `repro.protocol` directly.
+    from repro.core import Sketch, reconcile_sets
+    a = Sketch.from_items(list_of_bytes_a, nbytes=32)
+    b = Sketch.from_items(list_of_bytes_b, nbytes=32)
+    only_a, only_b, m_used = reconcile_sets(a, b)   # one Session, hidden
+
+``reconcile_sets`` is kept for the common two-sets-in-one-process case and
+for API compatibility; it offers no pacing control, no wire bytes, no
+backend selection and no multi-peer reuse of the stream.  New code should
+open a ``Session`` against a ``SymbolStream`` directly (see
+``examples/quickstart.py`` and ``docs/ARCHITECTURE.md``).
 """
 from __future__ import annotations
 

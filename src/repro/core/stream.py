@@ -62,6 +62,25 @@ class StreamDecoder:
 
     def receive(self, sym: CodedSymbols) -> bool:
         """Feed symbols [m, m+sym.m) of A's stream.  Returns `decoded`."""
+        old, m = self.absorb(sym)
+        if self.backend == "device":
+            self._peel_device(old, m)
+        else:
+            self.peel_window(old, m)
+        return self.mark_decoded()
+
+    def absorb(self, sym: CodedSymbols) -> tuple[int, int]:
+        """Ingest a window without peeling: subtract the local symbols,
+        append to the residual ``work`` prefix, and extend every already-
+        recovered item's chain through the new rows.
+
+        Returns ``(old, new)`` — the prefix length before and after —
+        for a later :meth:`peel_window` / batched device decode.  Splitting
+        ingest from peel is what lets a sharded session absorb every
+        shard's frame first and then decode all shards in one batched
+        device call; plain sessions use :meth:`receive`, which is
+        ``absorb`` + peel + :meth:`mark_decoded`.
+        """
         old = self.work.m
         if self.local is not None:
             loc = self.local.window(old, old + sym.m)
@@ -72,10 +91,16 @@ class StreamDecoder:
         # extend recovered items' chains through the new rows
         self._walk(self.rec_items, self.rec_hashes, self.rec_sides,
                    self._rnext, self._rstate, m)
-        if self.backend == "device":
-            self._peel_device(old, m)
-        else:
-            self._peel(np.arange(old, m, dtype=np.int64))
+        return old, m
+
+    def peel_window(self, old: int, m: int) -> None:
+        """Host-peel rows [old, m) of the residual (plus whatever their
+        removals touch) — the exact engine, also the per-shard overflow
+        fallback of the batched device path."""
+        self._peel(np.arange(old, m, dtype=np.int64))
+
+    def mark_decoded(self) -> bool:
+        """Record the ρ(0)=1 termination point once; returns ``decoded``."""
         done = self.decoded
         if done and self.decoded_at is None:
             self.decoded_at = self.symbols_received
@@ -133,10 +158,23 @@ class StreamDecoder:
                             nbytes=self.nbytes, key=self.key,
                             max_diff=self.max_diff)
         if res.overflow:
-            self._peel(np.arange(old, m, dtype=np.int64))
+            self.peel_window(old, m)
             return
+        self.merge_device_result(res)
+
+    def merge_device_result(self, res) -> None:
+        """Fold a successful :func:`repro.kernels.ops.decode_device` (or one
+        shard of ``decode_device_batched``) outcome into host state: adopt
+        the peeled residual as ``work`` and register each newly recovered
+        item with its chain advanced to the first index ≥ the prefix length
+        (so later windows keep extending it).  ``res.overflow`` must be
+        False — overflowed decodes leave state untouched and the caller
+        falls back to :meth:`peel_window`.
+        """
+        assert not res.overflow
         if res.items.shape[0] == 0:
             return
+        m = self.work.m
         self.work = res.residual
         nxt = np.zeros(res.items.shape[0], np.int64)
         state = map_seeds(res.items, self.key, self.nbytes).copy()

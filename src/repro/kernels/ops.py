@@ -21,7 +21,7 @@ from repro.core.mapping import kmax
 
 from .iblt_encode import iblt_encode
 from .map_indices import map_indices
-from .peel import peel_waves
+from .peel import peel_waves, peel_waves_batched
 
 
 def _auto_interpret(interpret):
@@ -206,3 +206,90 @@ def decode_device(sums, checks, counts, *, nbytes: int, key=DEFAULT_KEY,
     return DeviceDecodeResult(items, hashes, sides, bool(success),
                               bool(state.overflow), int(state.rounds),
                               residual)
+
+
+def decode_device_batched(shards, *, nbytes: int, key=DEFAULT_KEY,
+                          max_diff: int | None = None,
+                          max_rounds: int = 10_000, K: int | None = None,
+                          block_m: int = 256, interpret: bool | None = None
+                          ) -> list[DeviceDecodeResult]:
+    """Wave-peel S shards' difference symbols in ONE batched device call.
+
+    ``shards`` is a sequence of host :class:`~repro.core.symbols.CodedSymbols`
+    — one ragged residual prefix per shard (e.g. the ``work`` buffers of S
+    shard decoders).  Every shard is padded to a single shared tile bucket
+    ``mp = ceil(max_s m_s / block_m) · block_m`` and the per-shard true
+    prefix lengths travel as a traced ``(S,)`` data vector into
+    :func:`repro.kernels.peel.peel_waves_batched`, which ``vmap``s the wave
+    engine over the shard axis: one compiled program, one dispatch per
+    wave (or one total under ``lax.while_loop`` on TPU), regardless of S.
+
+    ``max_diff`` bounds each shard's fixed recovered-item buffer
+    *individually*; a shard that trips it freezes only itself and comes
+    back with ``overflow=True`` while its neighbours finish — the caller
+    falls back to the host decoder for exactly those shards.  The default
+    (``mp``) can never overflow, same argument as :func:`decode_device`.
+
+    Returns one :class:`DeviceDecodeResult` per shard, in input order.
+    """
+    interpret = _auto_interpret(interpret)
+    from repro.core.symbols import CodedSymbols
+    S = len(shards)
+    if S == 0:
+        return []
+    ms = [sym.m for sym in shards]
+    m_hi = max(ms)
+    if m_hi == 0:
+        L = shards[0].L
+        empty = DeviceDecodeResult(
+            np.zeros((0, L), np.uint32), np.zeros(0, np.uint64),
+            np.zeros(0, np.int8), True, False, 0,
+            CodedSymbols.zeros(0, nbytes))
+        return [empty] * S
+    L = shards[0].L
+    assert all(sym.L == L and sym.nbytes == shards[0].nbytes
+               for sym in shards), "shards must share one item geometry"
+    mp = ((m_hi + block_m - 1) // block_m) * block_m
+    if K is None:
+        K = kmax(mp)
+    D = mp if max_diff is None else max(int(max_diff), 1)
+
+    sums = np.zeros((S, mp, L), np.uint32)
+    checks = np.zeros((S, mp, 2), np.uint32)
+    counts = np.zeros((S, mp, 1), np.int32)
+    for s, sym in enumerate(shards):
+        sums[s, : sym.m] = sym.sums
+        checks[s, : sym.m, 0] = (sym.checks >> np.uint64(32)).astype(np.uint32)
+        checks[s, : sym.m, 1] = (sym.checks &
+                                 np.uint64(0xFFFFFFFF)).astype(np.uint32)
+        counts[s, : sym.m, 0] = sym.counts.astype(np.int32)
+
+    state, success = peel_waves_batched(
+        jnp.asarray(sums), jnp.asarray(checks), jnp.asarray(counts),
+        m=np.asarray(ms, np.int32), nbytes=nbytes, key=key, max_diff=D,
+        K=K, max_rounds=max_rounds, use_while_loop=not interpret)
+
+    rec_items = np.asarray(state.rec_items)
+    rec_checks = np.asarray(state.rec_checks)
+    rec_sides = np.asarray(state.rec_sides)
+    n_recs = np.asarray(state.n_rec)
+    overflow = np.asarray(state.overflow)
+    rounds = np.asarray(state.rounds)
+    success = np.asarray(success)
+    r_sums = np.asarray(state.sums)
+    r_checks = np.asarray(state.checks)
+    r_counts = np.asarray(state.counts)
+
+    out = []
+    for s, m_s in enumerate(ms):
+        n_rec = int(n_recs[s])
+        rchk = rec_checks[s, :n_rec]
+        hashes = (rchk[:, 0].astype(np.uint64) << np.uint64(32)) | \
+            rchk[:, 1].astype(np.uint64)
+        residual = device_symbols_to_host(
+            r_sums[s, :m_s], r_checks[s, :m_s], r_counts[s, :m_s, 0], nbytes)
+        out.append(DeviceDecodeResult(
+            rec_items[s, :n_rec].copy(), hashes,
+            rec_sides[s, :n_rec].astype(np.int8), bool(success[s]),
+            bool(overflow[s]), int(rounds[s]), residual))
+    return out

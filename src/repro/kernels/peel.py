@@ -29,6 +29,10 @@ caller can fall back to the exact host decoder.
 
 A pure-jnp engine (``kernel="ref"``) mirrors each stage op-for-op for
 CPU runs and oracle tests; both engines produce bit-identical waves.
+
+For sharded serving, :func:`peel_waves_batched` ``vmap``s the identical
+wave over a leading shard axis — S independent decodes, ragged prefix
+lengths as data, one compiled program (see ``ops.decode_device_batched``).
 """
 from __future__ import annotations
 
@@ -374,4 +378,93 @@ def peel_waves(sums, checks, counts, *, m: int, nbytes: int, key,
     empty = (state.counts[:, 0] == 0) & (state.checks[:, 0] == 0) & \
             (state.checks[:, 1] == 0) & jnp.all(state.sums == 0, axis=1)
     success = jnp.all(empty) & ~state.overflow
+    return state, success
+
+
+# ---------------------------------------------------------------------------
+# Batched wave loop: S independent shard decodes as ONE device program.
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=64)
+def _batched_wave_jit(S: int, mp: int, cap: int, max_diff: int, K: int,
+                      L: int, nbytes: int, key):
+    """One jitted, ``vmap``-ed peel wave over the shard axis.
+
+    Cached per static-shape bucket ``(S, mp, cap, max_diff, K, L)``; the
+    per-shard prefix lengths ``m`` enter as a traced ``(S,)`` vector, so a
+    set of growing shard prefixes re-uses one compiled program until the
+    *longest* shard crosses a tile boundary.  Always the ref engine: dense
+    jnp stages vmap cleanly and compile for both CPU and TPU.
+    """
+    purity_fn, map_fn, apply_fn = _engines(
+        nbytes=nbytes, key=key, K=K, kernel="ref", m=None, mp=mp,
+        block_m=mp, block_n=cap, interpret=True)
+    wave = functools.partial(_wave, mp=mp, cap=cap, max_diff=max_diff,
+                             purity_fn=purity_fn, map_fn=map_fn,
+                             apply_fn=apply_fn)
+    return jax.jit(jax.vmap(wave, in_axes=(0, 0)))
+
+
+def peel_waves_batched(sums, checks, counts, *, m, nbytes: int, key,
+                       max_diff: int, K: int, max_rounds: int = 10_000,
+                       block_n: int = 256, use_while_loop: bool = False):
+    """Wave-peel ``S`` shards' difference symbols in lockstep on device.
+
+    The batched counterpart of :func:`peel_waves` for sharded serving: the
+    inputs carry a leading shard axis — sums ``(S, mp, L)`` uint32, checks
+    ``(S, mp, 2)`` uint32, counts ``(S, mp, 1)`` int32 — where ``mp`` is the
+    *shared* tile bucket (every shard padded to the longest shard's bucket;
+    rows ``[m[s], mp)`` of shard ``s`` must be zero).  ``m`` is a ``(S,)``
+    int32 vector of true per-shard prefix lengths and is traced data, not a
+    static shape, so ragged shard progress batches into one program.
+
+    Every wave is one vmapped dispatch of the ref-engine stages over the
+    shard axis (:func:`_batched_wave_jit`); a shard whose wave recovers
+    nothing simply no-ops while hotter shards keep peeling, and a shard
+    that trips ``max_diff`` freezes its own state and raises only its own
+    ``overflow`` flag — the other shards are unaffected (per-shard host
+    fallback, not all-shard).
+
+    Returns ``(state, success)``: a :class:`PeelState` whose every leaf has
+    the leading shard axis, and a ``(S,)`` bool of per-shard success (all
+    of the shard's symbols emptied and no overflow).
+
+    ``use_while_loop=True`` stages the whole loop into the jit program via
+    ``jax.lax.while_loop`` (one device dispatch total — the TPU serving
+    path); the default Python loop issues one batched dispatch per wave,
+    which is the right trade on CPU where each jitted wave is cheap but
+    staging thousands of waves is not.
+    """
+    S, mp, L = sums.shape
+    D = max_diff
+    cap = min(2 * max(D, 1), mp)
+    cap = max(((cap + block_n - 1) // block_n) * block_n, block_n)
+    key = tuple(key)
+    state = PeelState(
+        sums=jnp.asarray(sums, jnp.uint32),
+        checks=jnp.asarray(checks, jnp.uint32),
+        counts=jnp.asarray(counts, jnp.int32),
+        rec_items=jnp.zeros((S, D, L), jnp.uint32),
+        rec_checks=jnp.zeros((S, D, 2), jnp.uint32),
+        rec_sides=jnp.zeros((S, D), jnp.int32),
+        n_rec=jnp.zeros(S, jnp.int32),
+        changed=jnp.ones(S, bool),
+        overflow=jnp.zeros(S, bool),
+        rounds=jnp.zeros(S, jnp.int32),
+    )
+    m = jnp.asarray(m, jnp.int32)
+    wave = _batched_wave_jit(S, mp, cap, D, K, L, nbytes, key)
+    if use_while_loop:
+        state = jax.lax.while_loop(
+            lambda s: jnp.any(s.changed & ~s.overflow) &
+            jnp.all(s.rounds < max_rounds),
+            lambda s: wave(s, m), state)
+    else:
+        while True:
+            state = wave(state, m)
+            if not bool(jnp.any(state.changed & ~state.overflow)) or \
+                    int(state.rounds.max()) >= max_rounds:
+                break
+    empty = (state.counts[..., 0] == 0) & (state.checks[..., 0] == 0) & \
+            (state.checks[..., 1] == 0) & jnp.all(state.sums == 0, axis=2)
+    success = jnp.all(empty, axis=1) & ~state.overflow
     return state, success

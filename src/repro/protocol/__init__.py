@@ -3,13 +3,22 @@
 One :class:`SymbolStream` per set — it serves zero-copy windows or wire
 byte frames of the universal coded-symbol stream to any number of
 :class:`Session` peers, each with its own :mod:`pacing <repro.protocol.pacing>`
-policy.  See ``examples/quickstart.py`` and ``examples/multi_peer_sync.py``.
+policy.  For datacenter-scale fan-out, :class:`ShardedStream` /
+:class:`ShardedSession` hash-partition the key space into S shards served
+as merged wire payloads and decoded in one batched device call per grow
+step.  See ``examples/quickstart.py``, ``examples/multi_peer_sync.py`` and
+``examples/sharded_sync.py``; the layer map lives in
+``docs/ARCHITECTURE.md`` and the byte formats in ``docs/WIRE_FORMAT.md``.
 """
 from .pacing import Exponential, FixedBlock, LineRate, Pacing
 from .session import (ProtocolError, Session, SessionReport, run_session)
+from .sharded import (ShardedSession, ShardedStream, ShardReport,
+                      ShardedReport, run_sharded_session, shard_of)
 from .stream import SymbolStream
 
 __all__ = [
     "Exponential", "FixedBlock", "LineRate", "Pacing", "ProtocolError",
-    "Session", "SessionReport", "SymbolStream", "run_session",
+    "Session", "SessionReport", "ShardReport", "ShardedReport",
+    "ShardedSession", "ShardedStream", "SymbolStream", "run_session",
+    "run_sharded_session", "shard_of",
 ]

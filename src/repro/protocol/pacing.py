@@ -17,6 +17,11 @@ paper's §6 deployment model:
   bandwidth-delay product of symbols is always in flight.  Pull-model
   equivalent: every window is ⌈BDP⌉ symbols; overshoot is bounded by the
   BDP regardless of the difference size.
+
+Policies are **stateless**: :meth:`Pacing.next_take` is a pure function of
+the symbols already pulled, so one instance can drive any number of
+sessions — or all S shards of a :class:`~repro.protocol.sharded.ShardedSession`,
+where it is applied to each shard's own progress independently.
 """
 from __future__ import annotations
 
@@ -24,13 +29,33 @@ import math
 
 
 class Pacing:
-    """Policy interface: next window size given symbols already pulled."""
+    """Policy interface: next window size given symbols already pulled.
+
+    Subclasses implement :meth:`next_take` as a pure (stateless) function;
+    sessions call it with their current stream position before every
+    request and pull exactly that many further symbols.
+    """
 
     def next_take(self, m_sent: int) -> int:
+        """Symbols to request next, given ``m_sent`` already pulled.
+
+        Must return ≥ 1 (a session that is not decoded always needs more
+        of the stream).
+        """
         raise NotImplementedError
 
 
 class FixedBlock(Pacing):
+    """Constant ``block``-symbol windows.
+
+    Minimal overshoot (≤ block − 1 symbols past the decodable prefix), one
+    round trip per block — the most chatty and the most byte-frugal
+    schedule.
+
+    >>> [FixedBlock(5).next_take(m) for m in (0, 5, 80)]
+    [5, 5, 5]
+    """
+
     def __init__(self, block: int = 8):
         assert block >= 1
         self.block = block
@@ -43,6 +68,18 @@ class FixedBlock(Pacing):
 
 
 class Exponential(Pacing):
+    """Windows growing ∝ the prefix already pulled.
+
+    ``next_take(m) = max(block, ⌊m·(growth − 1)⌋)``: O(log d) round trips
+    at the price of up to (growth − 1)·m overshoot.
+
+    >>> exp = Exponential(block=8, growth=2.0)    # the doubling schedule
+    >>> [exp.next_take(m) for m in (0, 8, 16, 100)]
+    [8, 8, 16, 100]
+    >>> Exponential(block=16, growth=1.5).next_take(64)
+    32
+    """
+
     def __init__(self, block: int = 8, growth: float = 2.0):
         assert block >= 1 and growth > 1.0
         self.block = block
@@ -60,7 +97,11 @@ class LineRate(Pacing):
 
     ``bandwidth`` is in symbols/second (divide link bytes/s by the wire
     size ℓ + 8 + ~1 of one symbol); the in-flight window is
-    ``bandwidth · rtt`` symbols.
+    ``bandwidth · rtt`` symbols, so overshoot is bounded by the BDP
+    regardless of the difference size.
+
+    >>> LineRate(bandwidth=1000, rtt=0.05).next_take(0)
+    50
     """
 
     def __init__(self, bandwidth: float, rtt: float):

@@ -127,7 +127,14 @@ class Session:
 
     # -- pull protocol ------------------------------------------------------
     def request(self) -> tuple[int, int] | None:
-        """Next stream window [lo, hi) this session wants; None if done."""
+        """Next stream window [lo, hi) this session wants; None if done.
+
+        ``lo`` is always the current stream position (windows are
+        contiguous) and ``hi − lo`` comes from the pacing policy, clamped
+        to ``max_m``.  Raises ``RuntimeError`` once ``max_m`` symbols have
+        been consumed without decoding — the reconciliation is diverging
+        (wrong key, corrupted stream, or a difference beyond the bound).
+        """
         if self.decoded:
             return None
         lo = self.symbols_received
@@ -137,9 +144,15 @@ class Session:
         return lo, min(lo + self.pacing.next_take(lo), self.max_m)
 
     def offer(self, sym: CodedSymbols, start: int = 0) -> bool:
-        """Feed stream symbols [start, start+sym.m).  Windows must arrive in
-        order; overlap with already-consumed symbols is trimmed.  Returns
-        ``decoded``."""
+        """Feed stream symbols [start, start+sym.m) as in-process views.
+
+        Invariants: windows arrive in order (``start`` past the current
+        position raises :class:`ProtocolError` — the stream has no gaps);
+        overlap with already-consumed symbols is trimmed, wholly stale
+        windows are no-ops; the window's item length must match the
+        session's.  The symbols are copied before peeling, so zero-copy
+        stream views may be passed directly.  Returns ``decoded``.
+        """
         have = self.symbols_received
         if start > have:
             raise ProtocolError(f"gap: expected window at {have}, got {start}")
@@ -153,7 +166,10 @@ class Session:
         return self.decoder.receive(sym)
 
     def offer_bytes(self, data: bytes) -> bool:
-        """Feed one wire frame (``encode_frames`` output).  Returns
+        """Feed one wire frame (:func:`repro.core.wire.encode_frames`
+        output).  The frame is self-describing — its header carries the
+        window start and the remote set size, which is recorded on
+        :attr:`remote_items` — then :meth:`offer` rules apply.  Returns
         ``decoded``."""
         sym, n_items, start = decode_frames(data)
         self.bytes_received += len(data)
@@ -166,6 +182,12 @@ class Session:
         return self.decoder.result()
 
     def report(self) -> SessionReport:
+        """Snapshot the session outcome as a :class:`SessionReport`.
+
+        Valid at any time: before decode it reports the partial recovery
+        (``symbols_used`` then falls back to ``symbols_received``); after
+        decode it is the final reconciliation result.
+        """
         only_remote, only_local = self.decoder.result()
         return SessionReport(
             only_remote=only_remote, only_local=only_local,
@@ -181,12 +203,28 @@ def run_session(stream: SymbolStream, session: Session,
                 backend: str | None = None) -> SessionReport:
     """Drive ``session`` to completion against ``stream``.
 
-    ``wire=True`` routes every window through the byte-level frame codec —
-    exactly what two networked peers would exchange.  ``backend`` switches
-    the session's peel engine ("host" | "device" | "auto") before driving
-    it; like :meth:`Session.set_backend`, the switch persists on the
-    session afterwards.
+    Parameters
+    ----------
+    stream: the remote side — a :class:`SymbolStream` (or, with a
+        :class:`~repro.protocol.sharded.ShardedSession`, a
+        :class:`~repro.protocol.sharded.ShardedStream`; sharded pairs are
+        dispatched to :func:`~repro.protocol.sharded.run_sharded_session`).
+    session: the local side; drained via its pull protocol until decoded.
+    wire: route every window through the byte-level frame codec — exactly
+        what two networked peers would exchange.  ``False`` serves
+        zero-copy in-process windows instead.
+    backend: optionally switch the session's peel engine ("host" |
+        "device" | "auto") before driving it; like
+        :meth:`Session.set_backend`, the switch persists on the session
+        afterwards.
+
+    Returns the session's report (:class:`SessionReport`, or
+    :class:`~repro.protocol.sharded.ShardedReport` for sharded pairs).
     """
+    from .sharded import ShardedSession, run_sharded_session
+    if isinstance(session, ShardedSession):
+        return run_sharded_session(stream, session, wire=wire,
+                                   backend=backend)
     if backend is not None:
         session.set_backend(backend)
     while True:

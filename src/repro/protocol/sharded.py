@@ -1,0 +1,477 @@
+"""Sharded SymbolStream serving — fan-out reconciliation over S shards.
+
+The paper's headline deployment (§7, Ethereum full-state sync) serves
+reconciliation to *many* peers over *huge* sets.  One universal stream
+already amortizes encoding across peers; sharding bounds the *decode* work
+per partition, the same lever PBS uses to keep per-group decode cheap and
+the composition trick of multi-party reconciliation over partitioned key
+spaces (per-partition sketches are independent, so they merge trivially):
+
+* the key space is hash-partitioned into ``S`` shards by a **stable SipHash
+  shard-of-key** (:func:`shard_of`) — derived from the session key via the
+  mapping-seed hash that :func:`repro.kernels.common.checksum_and_seed` /
+  :func:`repro.core.mapping.map_seeds` already compute, so both ends of a
+  session agree on the partition by construction;
+* a :class:`ShardedStream` keeps one universal symbol cache *per shard*
+  (S independent :class:`~repro.protocol.stream.SymbolStream`\\ s) and
+  serves **merged windows**: one wire payload interleaving per-shard
+  columnar frames behind a shard-id'd header extension
+  (:func:`repro.core.wire.encode_shard_frames`);
+* a :class:`ShardedSession` holds one incremental decoder per shard and
+  decodes every shard's residual in **one batched device call** per grow
+  step (:func:`repro.kernels.ops.decode_device_batched` — the peel wave
+  ``vmap``-ed over the shard axis, per-shard prefix lengths as data);
+* pacing is **per shard**: each shard pulls by its own progress, so a hot
+  shard (large local difference) keeps growing its window while settled
+  shards — each terminated by its own ρ(0)=1 signal — stop requesting.
+
+Because each shard sees ~d/S of the difference, per-shard ``max_diff``
+stays small and the fixed-shape device decoder stays in its fast path; a
+shard that still overflows falls back to the exact host peel *alone*.
+
+Shard invariance: for any S, the union of per-shard symmetric differences
+is exactly the unsharded symmetric difference (items never cross shards —
+the partition function depends only on the item and the key).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.decoder import resolve_backend
+from repro.core.hashing import DEFAULT_KEY, bytes_to_words, words_to_bytes
+from repro.core.mapping import map_seeds
+from repro.core.stream import StreamDecoder
+from repro.core.wire import decode_shard_frames, encode_shard_frames
+
+from .pacing import Exponential, Pacing
+from .session import ProtocolError
+from .stream import SymbolStream
+
+
+def _coerce_words(items, nbytes: int) -> np.ndarray:
+    """Items as (n, L) uint32 little-endian words (accepts bytes rows)."""
+    if isinstance(items, np.ndarray) and items.dtype == np.uint32:
+        return items
+    return bytes_to_words(items, nbytes)
+
+
+def shard_of(items, n_shards: int, key=DEFAULT_KEY,
+             nbytes: int | None = None) -> np.ndarray:
+    """Stable shard assignment of each item under a session key.
+
+    Parameters
+    ----------
+    items: ``(n, L)`` uint32 word rows, ``(n, nbytes)`` uint8 rows, or a
+        list of ``bytes`` — same coercions as the encoders.
+    n_shards: the partition size S ≥ 1.
+    key, nbytes: session geometry; ``nbytes`` defaults to ``4·L`` for word
+        input and is required for byte input.
+
+    Returns an ``(n,)`` int64 array of shard ids in ``[0, S)``.
+
+    The id is the high half of the item's mapping-PRNG seed — the SipHash
+    of the item under the tweaked session key that the encoder computes
+    anyway (:func:`repro.core.mapping.map_seeds`, device twin
+    ``kernels.common.checksum_and_seed``) — reduced mod S.  The *high*
+    word is used because the seed's low bit is forced odd for the
+    xorshift64 state, which would empty every even shard.  Invariants:
+    deterministic in (item, key, S); independent of insertion order and of
+    which peer evaluates it — both ends of a session compute the identical
+    partition.
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    words = _coerce_words(items, nbytes)
+    if nbytes is None:
+        nbytes = 4 * words.shape[1]
+    seeds = map_seeds(words, key, nbytes)
+    return ((seeds >> np.uint64(32)) % np.uint64(n_shards)).astype(np.int64)
+
+
+class ShardedStream:
+    """S universal symbol caches over a hash-partitioned key space.
+
+    One :class:`~repro.protocol.stream.SymbolStream` per shard; windows of
+    several shards merge into a single wire payload (:meth:`payload`).
+    Like the unsharded stream, serving never re-encodes: each shard's
+    prefix cache extends at most once per request and is shared by every
+    peer syncing against this stream.
+
+    Construct with :meth:`from_items`; mutate with :meth:`add_items` /
+    :meth:`remove_items`, which route every item to its stable shard.
+    """
+
+    def __init__(self, shards: list[SymbolStream], key=DEFAULT_KEY):
+        if not shards:
+            raise ValueError("need at least one shard")
+        self.shards = shards
+        self.key = key
+
+    @classmethod
+    def from_items(cls, items, nbytes: int, n_shards: int = 8,
+                   key=DEFAULT_KEY) -> "ShardedStream":
+        """Partition ``items`` into ``n_shards`` streams of ``nbytes``-byte
+        items under ``key`` (see :func:`shard_of` for accepted layouts)."""
+        words = _coerce_words(items, nbytes) if len(items) else \
+            np.zeros((0, (nbytes + 3) // 4), np.uint32)
+        ids = shard_of(words, n_shards, key, nbytes)
+        shards = [SymbolStream.from_items(words[ids == s], nbytes, key)
+                  for s in range(n_shards)]
+        return cls(shards, key)
+
+    # -- geometry -----------------------------------------------------------
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def nbytes(self) -> int:
+        return self.shards[0].nbytes
+
+    @property
+    def n_items(self) -> int:
+        """Total set size across shards."""
+        return sum(s.n_items for s in self.shards)
+
+    @property
+    def m(self) -> int:
+        """Total symbols materialized across all shard caches."""
+        return sum(s.m for s in self.shards)
+
+    # -- set mutation (routed to the owning shard) --------------------------
+    def _route(self, items) -> list[np.ndarray]:
+        words = _coerce_words(items, self.nbytes)
+        ids = shard_of(words, self.n_shards, self.key, self.nbytes)
+        return [words[ids == s] for s in range(self.n_shards)]
+
+    def add_items(self, items) -> None:
+        for shard, part in zip(self.shards, self._route(items)):
+            if len(part):
+                shard.add_items(part)
+
+    def remove_items(self, items) -> None:
+        for shard, part in zip(self.shards, self._route(items)):
+            if len(part):
+                shard.remove_items(part)
+
+    # -- serving ------------------------------------------------------------
+    def window(self, shard: int, lo: int, hi: int):
+        """Zero-copy view of shard ``shard``'s stream symbols [lo, hi)."""
+        return self.shards[shard].window(lo, hi)
+
+    def payload(self, requests) -> bytes:
+        """One merged wire payload answering per-shard window requests.
+
+        ``requests`` is an iterable of ``(shard, lo, hi)``; the result
+        interleaves one self-describing columnar frame per request behind
+        shard-id'd extension headers — settled shards simply don't appear.
+        """
+        frames = [(s, self.shards[s].frames(lo, hi)) for s, lo, hi in requests]
+        return encode_shard_frames(frames, self.n_shards)
+
+    # -- convenience --------------------------------------------------------
+    def session(self, local: "ShardedStream | None" = None,
+                **kwargs) -> "ShardedSession":
+        """A :class:`ShardedSession` against this stream's geometry
+        (n_shards/nbytes/key inherited when ``local`` is None)."""
+        if local is None:
+            kwargs.setdefault("n_shards", self.n_shards)
+            kwargs.setdefault("nbytes", self.nbytes)
+            kwargs.setdefault("key", self.key)
+        return ShardedSession(local=local, **kwargs)
+
+
+@dataclasses.dataclass
+class ShardReport:
+    """Per-shard slice of a completed sharded reconciliation."""
+    shard: int
+    only_remote: np.ndarray   # (r, L) uint32 words — remote-only, this shard
+    only_local: np.ndarray    # (s, L) uint32 words — local-only, this shard
+    symbols_used: int         # shard prefix length at its decode signal
+    symbols_received: int     # including pacing overshoot
+    remote_items: int | None  # |remote shard set|, from frame headers
+
+
+@dataclasses.dataclass
+class ShardedReport:
+    """Outcome of a completed :class:`ShardedSession`.
+
+    The aggregate fields mirror :class:`~repro.protocol.session.SessionReport`
+    (the union over shards *is* the unsharded difference — shard
+    invariance); ``shards`` keeps the per-shard breakdown.
+    """
+    shards: list[ShardReport]
+    only_remote: np.ndarray   # (r, L) uint32 words, all shards concatenated
+    only_local: np.ndarray    # (s, L) uint32 words
+    nbytes: int               # item length ℓ
+    symbols_used: int         # Σ per-shard symbols at decode
+    symbols_received: int     # Σ per-shard symbols received
+    bytes_received: int       # total merged-payload traffic (0 in-process)
+    remote_items: int | None  # Σ per-shard set sizes (None until all known)
+    grow_steps: int           # merged windows consumed (batched decodes run)
+
+    def only_remote_bytes(self) -> np.ndarray:
+        """(r, ℓ) uint8 — remote-exclusive items as raw bytes."""
+        return words_to_bytes(self.only_remote, self.nbytes)
+
+    def only_local_bytes(self) -> np.ndarray:
+        return words_to_bytes(self.only_local, self.nbytes)
+
+    def overhead(self, d: int | None = None) -> float:
+        """symbols_used / d (defaults to the recovered difference size)."""
+        if d is None:
+            d = self.only_remote.shape[0] + self.only_local.shape[0]
+        return self.symbols_used / max(d, 1)
+
+
+class _ShardState:
+    """One shard's decoder + protocol bookkeeping inside a ShardedSession."""
+
+    __slots__ = ("decoder", "remote_items")
+
+    def __init__(self, decoder: StreamDecoder):
+        self.decoder = decoder
+        self.remote_items: int | None = None
+
+
+class ShardedSession:
+    """Incremental reconciliation of a sharded local set against a
+    :class:`ShardedStream`, one decoder per shard, one batched device
+    decode per grow step.
+
+    Parameters
+    ----------
+    local: the local side as a :class:`ShardedStream` (each shard's encoder
+        is subtracted from the matching remote shard), or None to decode S
+        raw shard streams (recovers the remote sets themselves).
+    n_shards, nbytes, key: partition geometry — inferred from ``local``
+        when given.  Both ends must agree on all three (the wire payload
+        carries ``n_shards`` and each frame carries ``nbytes``; mismatches
+        raise :class:`~repro.protocol.session.ProtocolError`).
+    pacing: per-shard window schedule.  Policies are stateless (a pure
+        function of that shard's progress), so one instance drives all
+        shards independently; default is the session-standard doubling
+        schedule.
+    max_m: abort bound on any single shard's stream consumption.
+    backend: "host" | "device" | "auto".  "device" decodes all shards that
+        received symbols in ONE :func:`repro.kernels.ops.decode_device_batched`
+        call per grow step; a shard whose ``max_diff`` overflows falls back
+        to the exact host peel for that shard only.
+    max_diff: per-shard bound on the device decoder's fixed recovered-item
+        buffers (sharding divides the difference ~uniformly, so this can be
+        ~d/S plus slack rather than d).
+
+    Invariants: windows must arrive in order per shard (overlap with
+    already-consumed symbols is trimmed, gaps raise); each shard terminates
+    on its own ρ(0)=1 signal; ``decoded`` is the conjunction over shards.
+    """
+
+    def __init__(self, local: ShardedStream | None = None,
+                 n_shards: int | None = None, nbytes: int | None = None,
+                 pacing: Pacing | None = None, key=None,
+                 max_m: int = 1 << 22, backend: str = "host",
+                 max_diff: int | None = None):
+        if local is not None:
+            n_shards = local.n_shards if n_shards is None else n_shards
+            nbytes = local.nbytes if nbytes is None else nbytes
+            key = local.key if key is None else key
+            if n_shards != local.n_shards:
+                raise ValueError(f"n_shards={n_shards} but local partition "
+                                 f"has {local.n_shards}")
+        if n_shards is None or nbytes is None:
+            raise ValueError("need n_shards and nbytes (or a local "
+                             "ShardedStream to infer them from)")
+        key = DEFAULT_KEY if key is None else key
+        self.n_shards = n_shards
+        self.nbytes = nbytes
+        self.key = key
+        self.pacing = pacing or Exponential(block=8, growth=2.0)
+        self.max_m = max_m
+        self.backend = resolve_backend(backend)
+        self.max_diff = max_diff
+        self.bytes_received = 0
+        self.grow_steps = 0
+        # per-shard decoders peel on the host; THIS session owns the
+        # device path so all shards batch into one dispatch
+        self._shards = [
+            _ShardState(StreamDecoder(
+                nbytes, local=local.shards[s].encoder if local else None,
+                key=key, backend="host"))
+            for s in range(n_shards)]
+
+    # -- state --------------------------------------------------------------
+    def set_backend(self, backend: str) -> None:
+        """Switch the decode engine; safe between grow steps (both engines
+        maintain identical per-shard decoder state)."""
+        self.backend = resolve_backend(backend)
+
+    @property
+    def decoded(self) -> bool:
+        """True once every shard has hit its ρ(0)=1 termination signal."""
+        return all(st.decoder.decoded for st in self._shards)
+
+    @property
+    def symbols_received(self) -> int:
+        return sum(st.decoder.symbols_received for st in self._shards)
+
+    # -- pull protocol ------------------------------------------------------
+    def requests(self) -> list[tuple[int, int, int]]:
+        """Next window [lo, hi) per still-undecoded shard; [] when done.
+
+        Each shard's window size comes from the shared pacing policy
+        applied to *that shard's* progress — settled shards drop out of the
+        list, hot shards keep growing.  Raises ``RuntimeError`` if any
+        shard exceeds ``max_m`` without decoding.
+        """
+        reqs = []
+        for s, st in enumerate(self._shards):
+            if st.decoder.decoded:
+                continue
+            lo = st.decoder.symbols_received
+            if lo >= self.max_m:
+                raise RuntimeError(f"shard {s} did not converge within "
+                                   f"{self.max_m} symbols")
+            reqs.append((s, lo, min(lo + self.pacing.next_take(lo),
+                                    self.max_m)))
+        return reqs
+
+    def offer_payload(self, data: bytes) -> bool:
+        """Consume one merged wire payload (all shards' frames), then run
+        ONE batched decode over every shard that received symbols.
+        Returns ``decoded``."""
+        n_shards, frames = decode_shard_frames(data)
+        if n_shards != self.n_shards:
+            raise ProtocolError(f"partition mismatch: payload has "
+                                f"{n_shards} shards, session {self.n_shards}")
+        self.bytes_received += len(data)
+        windows = []
+        for shard_id, sym, n_items, start in frames:
+            self._shards[shard_id].remote_items = n_items
+            windows.append((shard_id, sym, start))
+        return self.offer_windows(windows)
+
+    def offer_windows(self, windows) -> bool:
+        """Feed ``(shard, symbols, start)`` windows (the in-process peer of
+        :meth:`offer_payload`), absorbing every window first and then
+        decoding all touched shards in one batched step.  Validation is
+        all-or-nothing: every window is checked (shard id, order,
+        geometry) before ANY state mutates, so a rejected round can be
+        corrected and retried without losing symbols.  Returns
+        ``decoded``."""
+        # pass 1: validate the whole round against simulated per-shard
+        # positions (a round may carry several windows for one shard)
+        have = {}
+        accepted = []       # (shard, trimmed symbols) in arrival order
+        for shard_id, sym, start in windows:
+            if not 0 <= shard_id < self.n_shards:
+                raise ProtocolError(f"shard_id {shard_id} outside "
+                                    f"[0, {self.n_shards})")
+            pos = have.setdefault(
+                shard_id, self._shards[shard_id].decoder.symbols_received)
+            if start > pos:
+                raise ProtocolError(f"shard {shard_id} gap: expected window "
+                                    f"at {pos}, got {start}")
+            if sym.nbytes != self.nbytes:
+                raise ProtocolError(f"geometry mismatch: ℓ={sym.nbytes}, "
+                                    f"session ℓ={self.nbytes}")
+            if start < pos:
+                if start + sym.m <= pos:
+                    continue                      # wholly stale window
+                sym = sym.window(pos - start)
+            have[shard_id] = pos + sym.m
+            accepted.append((shard_id, sym))
+        # pass 2: absorb (decoder positions evolve exactly as simulated)
+        absorbed = [(shard_id, *self._shards[shard_id].decoder.absorb(sym))
+                    for shard_id, sym in accepted]
+        if absorbed:
+            self.grow_steps += 1
+            if self.backend == "device":
+                self._decode_batched(absorbed)
+            else:
+                for shard_id, old, m in absorbed:
+                    self._shards[shard_id].decoder.peel_window(old, m)
+        for shard_id, _, _ in absorbed:
+            self._shards[shard_id].decoder.mark_decoded()
+        return self.decoded
+
+    def _decode_batched(self, absorbed) -> None:
+        """One ``decode_device_batched`` dispatch over every absorbed
+        shard's residual; per-shard overflow falls back to the host peel
+        for that shard alone."""
+        from repro.kernels.ops import decode_device_batched
+        decs = [self._shards[s].decoder for s, _, _ in absorbed]
+        results = decode_device_batched(
+            [d.work for d in decs], nbytes=self.nbytes, key=self.key,
+            max_diff=self.max_diff)
+        for (shard_id, old, m), dec, res in zip(absorbed, decs, results):
+            if res.overflow:
+                dec.peel_window(old, m)
+            else:
+                dec.merge_device_result(res)
+
+    # -- outcome ------------------------------------------------------------
+    def result(self):
+        """(only_remote, only_local) uint32 word arrays, shards merged."""
+        rem = [st.decoder.result()[0] for st in self._shards]
+        loc = [st.decoder.result()[1] for st in self._shards]
+        return np.concatenate(rem), np.concatenate(loc)
+
+    def report(self) -> ShardedReport:
+        per_shard = []
+        for s, st in enumerate(self._shards):
+            only_remote, only_local = st.decoder.result()
+            per_shard.append(ShardReport(
+                shard=s, only_remote=only_remote, only_local=only_local,
+                symbols_used=st.decoder.decoded_at or
+                st.decoder.symbols_received,
+                symbols_received=st.decoder.symbols_received,
+                remote_items=st.remote_items))
+        counts = [sr.remote_items for sr in per_shard]
+        return ShardedReport(
+            shards=per_shard,
+            only_remote=np.concatenate([sr.only_remote for sr in per_shard]),
+            only_local=np.concatenate([sr.only_local for sr in per_shard]),
+            nbytes=self.nbytes,
+            symbols_used=sum(sr.symbols_used for sr in per_shard),
+            symbols_received=sum(sr.symbols_received for sr in per_shard),
+            bytes_received=self.bytes_received,
+            remote_items=None if any(c is None for c in counts)
+            else sum(counts),
+            grow_steps=self.grow_steps)
+
+
+def run_sharded_session(stream: ShardedStream, session: ShardedSession,
+                        wire: bool = True,
+                        backend: str | None = None) -> ShardedReport:
+    """Drive ``session`` to completion against a :class:`ShardedStream`.
+
+    Each round trip gathers every undecoded shard's window request, answers
+    all of them with one merged payload (``wire=True``, the native sharded
+    mode — exactly the bytes two networked peers exchange) or with
+    in-process zero-copy windows (``wire=False``), and hands them to the
+    session, which decodes all touched shards in one batched step.
+    ``backend`` switches the session's engine first, like
+    :meth:`ShardedSession.set_backend`, and persists afterwards.
+
+    Both ends must run the identical partition: mixed shard counts would
+    silently mis-reconcile in-process (the wire path carries S in the
+    payload header), so the driver rejects them up front.
+    """
+    if stream.n_shards != session.n_shards:
+        raise ProtocolError(f"partition mismatch: stream has "
+                            f"{stream.n_shards} shards, session "
+                            f"{session.n_shards}")
+    if backend is not None:
+        session.set_backend(backend)
+    while True:
+        reqs = session.requests()
+        if not reqs:
+            break
+        if wire:
+            session.offer_payload(stream.payload(reqs))
+        else:
+            session.offer_windows(
+                [(s, stream.window(s, lo, hi), lo) for s, lo, hi in reqs])
+    return session.report()

@@ -23,13 +23,23 @@ from repro.core.wire import encode_frames
 
 
 class SymbolStream:
-    """Serve windows of one set's universal coded-symbol stream."""
+    """Serve windows of one set's universal coded-symbol stream.
+
+    Wraps one :class:`~repro.core.encoder.Encoder` (the set plus its grown
+    symbol-prefix cache).  Invariants: the stream is *universal* — every
+    peer sees the same symbol at the same index, whatever window schedule
+    it pulls by — and serving is zero-copy: a window call extends the
+    shared cache at most once and returns views of it.
+    """
 
     def __init__(self, encoder: Encoder):
         self.encoder = encoder
 
     @classmethod
     def from_items(cls, items, nbytes: int, key=DEFAULT_KEY) -> "SymbolStream":
+        """Stream of the set ``items`` (list of ``bytes``, ``(n, nbytes)``
+        uint8 rows, or ``(n, L)`` uint32 word rows) of fixed item length
+        ``nbytes``, under session ``key``."""
         enc = Encoder(nbytes, key)
         if len(items):
             enc.add_items(items)
@@ -56,19 +66,33 @@ class SymbolStream:
     # -- serving ------------------------------------------------------------
     def window(self, lo: int, hi: int) -> CodedSymbols:
         """Zero-copy view of stream symbols [lo, hi); extends on demand.
-        Consume immediately — see the module docstring on view lifetime."""
+
+        Requires ``0 ≤ lo ≤ hi``; the cache grows to ``hi`` if needed.
+        The view aliases the shared cache *as of this call* — consume it
+        immediately (see the module docstring on view lifetime).
+        """
         return self.encoder.window(lo, hi)
 
     def frames(self, lo: int, hi: int) -> bytes:
-        """Wire frame (paper §6 encoding) for stream symbols [lo, hi)."""
+        """Wire frame (paper §6 encoding) for stream symbols [lo, hi).
+
+        The frame is self-describing (:func:`repro.core.wire.encode_frames`
+        with this stream's ``start=lo`` and set size), so a receiver needs
+        no side channel to place it in the stream.
+        """
         return encode_frames(self.window(lo, hi), start=lo,
                              n_items=self.n_items)
 
     # -- set mutation (updates the universal cache in place) ----------------
     def add_items(self, items) -> None:
+        """Add items to the set; the cached symbol prefix is updated in
+        place by linearity (§4.1), so open sessions keep pulling a
+        consistent stream of the *new* set."""
         self.encoder.add_items(items)
 
     def remove_items(self, items) -> None:
+        """Remove present items; same in-place linear update as
+        :meth:`add_items`."""
         self.encoder.remove_items(items)
 
     # -- convenience --------------------------------------------------------
