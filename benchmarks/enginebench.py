@@ -1,0 +1,93 @@
+"""Engine sweep: N concurrent peers, serial session loops vs ONE engine.
+
+For each peer count the sweep reconciles N independently-stale replicas
+against one shared ``SymbolStream`` three ways:
+
+* ``serial`` — N back-to-back :func:`repro.protocol.run_session` loops,
+  the pre-engine deployment shape (N separate grow loops);
+* ``engine_host`` — one :class:`repro.protocol.ReconcileEngine` driving
+  all N sessions in shared ticks on the host peel;
+* ``engine_dev`` — the same engine on the device backend, where every
+  tick's (peer, window) units coalesce into ONE batched decode per shape
+  bucket and the double-buffered pipeline overlaps decode with frame
+  ingest.  Timed cold (per-bucket jit compile included) and warm.
+
+Derived columns record ticks and batched dispatches — with one pacing
+policy across peers, dispatches == ticks regardless of N, which is the
+engine's whole point.  CPU numbers are functional-trajectory only (as
+everywhere in this repo); the serving target is TPU.
+``benchmarks/run.py`` snapshots the emitted entries into
+``BENCH_engine.json`` for the CI perf artifact.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import emit, rand_items, timeit
+
+NBYTES = 16
+PEER_COUNTS = (1, 2, 4, 8)
+
+
+def main(quick: bool = True):
+    from repro.core import Sketch
+    from repro.protocol import (FixedBlock, ReconcileEngine, Session,
+                                SymbolStream, run_session)
+
+    n, lost, added = (2000, 80, 16) if quick else (50_000, 1200, 240)
+    d = lost + added
+    state = rand_items(n, NBYTES, 0)
+    stream = SymbolStream.from_items(state, NBYTES)
+
+    def replicas(n_peers):
+        out = []
+        for p in range(n_peers):
+            # disjoint staleness windows so peers do not share a diff
+            items = np.concatenate(
+                [np.delete(state, slice(p * lost, (p + 1) * lost), axis=0),
+                 rand_items(added, NBYTES, 9 + p)])
+            out.append(items)
+        return out
+
+    for N in PEER_COUNTS:
+        locals_ = replicas(N)
+
+        def serial():
+            reps = [run_session(
+                stream, Session(local=Sketch.from_items(it, NBYTES),
+                                pacing=FixedBlock(16)), wire=True)
+                for it in locals_]
+            return reps
+
+        dt, reps = timeit(serial, repeat=2)
+        emit(f"engine_serial_host_N{N}_d{d}", dt * 1e6,
+             f"symbols={sum(r.symbols_used for r in reps)} "
+             f"overhead={reps[-1].overhead(d):.2f}")
+
+        def engine_run(backend):
+            eng = ReconcileEngine()
+            for it in locals_:
+                eng.register(stream, Session(
+                    local=Sketch.from_items(it, NBYTES),
+                    pacing=FixedBlock(16), backend=backend), wire=True)
+            return eng, eng.run()
+
+        dt, (eng, reps) = timeit(lambda: engine_run("host"), repeat=2)
+        emit(f"engine_host_N{N}_d{d}", dt * 1e6,
+             f"ticks={eng.ticks} symbols={sum(r.symbols_used for r in reps)}")
+
+        # device backend: one batched dispatch per shape bucket per tick,
+        # pipelined with ingest.  Cold includes per-bucket jit compiles.
+        dt_cold, (eng, reps) = timeit(lambda: engine_run("device"), repeat=1)
+        assert all(r.only_remote.shape[0] == lost for r in reps)
+        emit(f"engine_dev_cold_N{N}_d{d}", dt_cold * 1e6,
+             f"ticks={eng.ticks} dispatches={eng.dispatches} "
+             "(ref engine, includes per-bucket jit compile)")
+        dt_warm, (eng, _) = timeit(lambda: engine_run("device"), repeat=2)
+        emit(f"engine_dev_warm_N{N}_d{d}", dt_warm * 1e6,
+             f"ticks={eng.ticks} dispatches={eng.dispatches} "
+             f"us_per_peer={dt_warm * 1e6 / N:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -28,8 +28,8 @@ def main() -> None:
                     help="render roofline table from dry-run artifacts")
     args = ap.parse_args()
 
-    from . import (alpha, itemsize, kernelbench, overhead, setsize,
-                   shardbench, statesync, throughput, wirebench)
+    from . import (alpha, enginebench, itemsize, kernelbench, overhead,
+                   setsize, shardbench, statesync, throughput, wirebench)
     suites = [
         ("overhead", overhead),      # Figs 4, 6
         ("throughput", throughput),  # Figs 7, 8
@@ -40,9 +40,11 @@ def main() -> None:
         ("kernelbench", kernelbench),  # device-encoder kernel (framework)
         ("wirebench", wirebench),    # §6 wire codec: vectorized vs loop
         ("shardbench", shardbench),  # sharded serving + batched decode
+        ("enginebench", enginebench),  # N-peer engine vs serial sessions
     ]
     artifacts = {"kernelbench": "BENCH_kernels.json",
-                 "shardbench": "BENCH_shards.json"}
+                 "shardbench": "BENCH_shards.json",
+                 "enginebench": "BENCH_engine.json"}
     from .common import RESULTS
     failed = []
     for name, mod in suites:

@@ -99,11 +99,19 @@ class StreamDecoder:
         fallback of the batched device path."""
         self._peel(np.arange(old, m, dtype=np.int64))
 
-    def mark_decoded(self) -> bool:
-        """Record the ρ(0)=1 termination point once; returns ``decoded``."""
+    def mark_decoded(self, at: int | None = None) -> bool:
+        """Record the ρ(0)=1 termination point once; returns ``decoded``.
+
+        ``at`` pins the recorded prefix length to the decode that actually
+        produced the signal — a pipelined engine absorbs the next window
+        *before* the previous decode's result lands, so at that moment
+        ``symbols_received`` already includes speculative overshoot that
+        the termination did not need.
+        """
         done = self.decoded
         if done and self.decoded_at is None:
-            self.decoded_at = self.symbols_received
+            self.decoded_at = self.symbols_received if at is None \
+                else min(at, self.symbols_received)
         return done
 
     # ------------------------------------------------------------------
@@ -164,21 +172,35 @@ class StreamDecoder:
 
     def merge_device_result(self, res) -> None:
         """Fold a successful :func:`repro.kernels.ops.decode_device` (or one
-        shard of ``decode_device_batched``) outcome into host state: adopt
+        unit of ``decode_device_batched``) outcome into host state: adopt
         the peeled residual as ``work`` and register each newly recovered
         item with its chain advanced to the first index ≥ the prefix length
         (so later windows keep extending it).  ``res.overflow`` must be
         False — overflowed decodes leave state untouched and the caller
         falls back to :meth:`peel_window`.
+
+        Tail-aware: the decode may cover only a *prefix* of the current
+        ``work`` (``res.residual.m ≤ work.m``) — a pipelined engine absorbs
+        the next window while the device result is still in flight.  The
+        rows absorbed after the dispatch are kept and each newly recovered
+        item is removed from them by walking its chain through the tail,
+        exactly as :meth:`absorb` does for previously recovered items.
         """
         assert not res.overflow
         if res.items.shape[0] == 0:
             return
-        m = self.work.m
-        self.work = res.residual
+        m0 = res.residual.m
+        assert m0 <= self.work.m
+        if m0 < self.work.m:
+            self.work = res.residual.concat(self.work.window(m0))
+        else:
+            self.work = res.residual
         nxt = np.zeros(res.items.shape[0], np.int64)
         state = map_seeds(res.items, self.key, self.nbytes).copy()
-        walk_chains(nxt, state, m)   # position each chain at first idx >= m
+        walk_chains(nxt, state, m0)  # position each chain at first idx >= m0
+        # remove the new items from any tail rows and leave every chain
+        # parked at the first index >= work.m for future windows
+        self._walk(res.items, res.hashes, res.sides, nxt, state, self.work.m)
         self.rec_items = np.concatenate([self.rec_items, res.items])
         self.rec_hashes = np.concatenate([self.rec_hashes, res.hashes])
         self.rec_sides = np.concatenate([self.rec_sides, res.sides])

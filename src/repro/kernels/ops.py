@@ -208,56 +208,133 @@ def decode_device(sums, checks, counts, *, nbytes: int, key=DEFAULT_KEY,
                               residual)
 
 
-def decode_device_batched(shards, *, nbytes: int, key=DEFAULT_KEY,
-                          max_diff: int | None = None,
-                          max_rounds: int = 10_000, K: int | None = None,
-                          block_m: int = 256, interpret: bool | None = None
-                          ) -> list[DeviceDecodeResult]:
-    """Wave-peel S shards' difference symbols in ONE batched device call.
+class PendingBatchedDecode:
+    """An in-flight :func:`decode_device_batched_start` dispatch.
 
-    ``shards`` is a sequence of host :class:`~repro.core.symbols.CodedSymbols`
-    — one ragged residual prefix per shard (e.g. the ``work`` buffers of S
-    shard decoders).  Every shard is padded to a single shared tile bucket
-    ``mp = ceil(max_s m_s / block_m) · block_m`` and the per-shard true
-    prefix lengths travel as a traced ``(S,)`` data vector into
+    Holds the device-resident :class:`~repro.kernels.peel.PeelState` (with
+    its leading unit axis) before host materialization.  ``ready()`` polls
+    the underlying JAX arrays non-blockingly — on TPU the whole wave loop
+    is one async dispatch, so a caller can overlap host work (e.g. frame
+    ingest for the next round) with the decode and only then ``wait()``.
+    On CPU the Python wave loop has already run by construction and
+    ``ready()`` is immediately True.
+    """
+
+    __slots__ = ("_state", "_success", "_ms", "_nbytes", "_results")
+
+    def __init__(self, state, success, ms, nbytes, results=None):
+        self._state = state
+        self._success = success
+        self._ms = ms
+        self._nbytes = nbytes
+        self._results = results
+
+    def ready(self) -> bool:
+        """Non-blocking: True once the device results can be read without
+        stalling (always True for trivially-empty or materialized work)."""
+        if self._results is not None:
+            return True
+        is_ready = getattr(self._success, "is_ready", None)
+        return bool(is_ready()) if callable(is_ready) else True
+
+    def wait(self) -> list[DeviceDecodeResult]:
+        """Materialize (blocking) — one result per input unit, in order."""
+        if self._results is not None:
+            return self._results
+        state, success, ms, nbytes = \
+            self._state, self._success, self._ms, self._nbytes
+        rec_items = np.asarray(state.rec_items)
+        rec_checks = np.asarray(state.rec_checks)
+        rec_sides = np.asarray(state.rec_sides)
+        n_recs = np.asarray(state.n_rec)
+        overflow = np.asarray(state.overflow)
+        rounds = np.asarray(state.rounds)
+        success = np.asarray(success)
+        r_sums = np.asarray(state.sums)
+        r_checks = np.asarray(state.checks)
+        r_counts = np.asarray(state.counts)
+
+        out = []
+        for s, m_s in enumerate(ms):
+            n_rec = int(n_recs[s])
+            rchk = rec_checks[s, :n_rec]
+            hashes = (rchk[:, 0].astype(np.uint64) << np.uint64(32)) | \
+                rchk[:, 1].astype(np.uint64)
+            residual = device_symbols_to_host(
+                r_sums[s, :m_s], r_checks[s, :m_s], r_counts[s, :m_s, 0],
+                nbytes)
+            out.append(DeviceDecodeResult(
+                rec_items[s, :n_rec].copy(), hashes,
+                rec_sides[s, :n_rec].astype(np.int8), bool(success[s]),
+                bool(overflow[s]), int(rounds[s]), residual))
+        self._results = out
+        self._state = self._success = None   # free device references
+        return out
+
+
+def decode_device_batched_start(units, *, nbytes: int, key=DEFAULT_KEY,
+                                max_diff: int | None = None,
+                                max_rounds: int = 10_000, K: int | None = None,
+                                block_m: int = 256, pad_units: int | None = None,
+                                interpret: bool | None = None
+                                ) -> PendingBatchedDecode:
+    """Dispatch the batched wave decode of U units without materializing.
+
+    ``units`` is a sequence of host :class:`~repro.core.symbols.CodedSymbols`
+    — one ragged residual prefix per unit (the ``work`` buffers of U
+    decoders; a unit is a shard of one session or, through the protocol
+    engine, any peer×shard pair sharing this shape bucket).  Every unit is
+    padded to a single shared tile bucket
+    ``mp = ceil(max_u m_u / block_m) · block_m`` and the per-unit true
+    prefix lengths travel as a traced ``(U,)`` data vector into
     :func:`repro.kernels.peel.peel_waves_batched`, which ``vmap``s the wave
-    engine over the shard axis: one compiled program, one dispatch per
-    wave (or one total under ``lax.while_loop`` on TPU), regardless of S.
+    engine over the unit axis: one compiled program, one dispatch per wave
+    (or one total under ``lax.while_loop`` on TPU), regardless of U.
 
-    ``max_diff`` bounds each shard's fixed recovered-item buffer
-    *individually*; a shard that trips it freezes only itself and comes
+    ``max_diff`` bounds each unit's fixed recovered-item buffer
+    *individually*; a unit that trips it freezes only itself and comes
     back with ``overflow=True`` while its neighbours finish — the caller
-    falls back to the host decoder for exactly those shards.  The default
+    falls back to the host decoder for exactly those units.  The default
     (``mp``) can never overflow, same argument as :func:`decode_device`.
 
-    Returns one :class:`DeviceDecodeResult` per shard, in input order.
+    ``pad_units`` pads the unit axis to a fixed batch size with empty
+    (m=0) dummy units, which no-op after their first wave.  The unit
+    count is a static shape in the per-bucket jit cache, so a caller
+    whose batch shrinks as units settle (the protocol engine, as peers
+    terminate) quantizes U to e.g. the next power of two and re-uses one
+    compiled program instead of recompiling per departure.
+
+    Returns a :class:`PendingBatchedDecode`; ``wait()`` yields one
+    :class:`DeviceDecodeResult` per unit, in input order.
     """
     interpret = _auto_interpret(interpret)
     from repro.core.symbols import CodedSymbols
-    S = len(shards)
-    if S == 0:
-        return []
-    ms = [sym.m for sym in shards]
+    U = len(units)
+    if U == 0:
+        return PendingBatchedDecode(None, None, (), nbytes, results=[])
+    ms = [sym.m for sym in units]
     m_hi = max(ms)
     if m_hi == 0:
-        L = shards[0].L
+        L = units[0].L
         empty = DeviceDecodeResult(
             np.zeros((0, L), np.uint32), np.zeros(0, np.uint64),
             np.zeros(0, np.int8), True, False, 0,
             CodedSymbols.zeros(0, nbytes))
-        return [empty] * S
-    L = shards[0].L
-    assert all(sym.L == L and sym.nbytes == shards[0].nbytes
-               for sym in shards), "shards must share one item geometry"
+        return PendingBatchedDecode(None, None, ms, nbytes,
+                                    results=[empty] * U)
+    L = units[0].L
+    assert all(sym.L == L and sym.nbytes == units[0].nbytes
+               for sym in units), "units must share one item geometry"
+    Up = max(U, pad_units) if pad_units else U
     mp = ((m_hi + block_m - 1) // block_m) * block_m
     if K is None:
         K = kmax(mp)
     D = mp if max_diff is None else max(int(max_diff), 1)
 
-    sums = np.zeros((S, mp, L), np.uint32)
-    checks = np.zeros((S, mp, 2), np.uint32)
-    counts = np.zeros((S, mp, 1), np.int32)
-    for s, sym in enumerate(shards):
+    sums = np.zeros((Up, mp, L), np.uint32)
+    checks = np.zeros((Up, mp, 2), np.uint32)
+    counts = np.zeros((Up, mp, 1), np.int32)
+    for s, sym in enumerate(units):
         sums[s, : sym.m] = sym.sums
         checks[s, : sym.m, 0] = (sym.checks >> np.uint64(32)).astype(np.uint32)
         checks[s, : sym.m, 1] = (sym.checks &
@@ -266,30 +343,28 @@ def decode_device_batched(shards, *, nbytes: int, key=DEFAULT_KEY,
 
     state, success = peel_waves_batched(
         jnp.asarray(sums), jnp.asarray(checks), jnp.asarray(counts),
-        m=np.asarray(ms, np.int32), nbytes=nbytes, key=key, max_diff=D,
-        K=K, max_rounds=max_rounds, use_while_loop=not interpret)
+        m=np.asarray(ms + [0] * (Up - U), np.int32), nbytes=nbytes, key=key,
+        max_diff=D, K=K, max_rounds=max_rounds,
+        use_while_loop=not interpret)
+    # wait() materializes per entry of ms (length U): dummy pad units past
+    # U are simply never read back
+    return PendingBatchedDecode(state, success, ms, nbytes)
 
-    rec_items = np.asarray(state.rec_items)
-    rec_checks = np.asarray(state.rec_checks)
-    rec_sides = np.asarray(state.rec_sides)
-    n_recs = np.asarray(state.n_rec)
-    overflow = np.asarray(state.overflow)
-    rounds = np.asarray(state.rounds)
-    success = np.asarray(success)
-    r_sums = np.asarray(state.sums)
-    r_checks = np.asarray(state.checks)
-    r_counts = np.asarray(state.counts)
 
-    out = []
-    for s, m_s in enumerate(ms):
-        n_rec = int(n_recs[s])
-        rchk = rec_checks[s, :n_rec]
-        hashes = (rchk[:, 0].astype(np.uint64) << np.uint64(32)) | \
-            rchk[:, 1].astype(np.uint64)
-        residual = device_symbols_to_host(
-            r_sums[s, :m_s], r_checks[s, :m_s], r_counts[s, :m_s, 0], nbytes)
-        out.append(DeviceDecodeResult(
-            rec_items[s, :n_rec].copy(), hashes,
-            rec_sides[s, :n_rec].astype(np.int8), bool(success[s]),
-            bool(overflow[s]), int(rounds[s]), residual))
-    return out
+def decode_device_batched(units, *, nbytes: int, key=DEFAULT_KEY,
+                          max_diff: int | None = None,
+                          max_rounds: int = 10_000, K: int | None = None,
+                          block_m: int = 256, pad_units: int | None = None,
+                          interpret: bool | None = None
+                          ) -> list[DeviceDecodeResult]:
+    """Wave-peel U units' difference symbols in ONE batched device call.
+
+    The synchronous convenience over :func:`decode_device_batched_start` —
+    dispatch and immediately materialize.  Callers that can overlap host
+    work with the device decode (the protocol engine's double-buffered
+    tick loop) use start/``wait`` directly.
+    """
+    return decode_device_batched_start(
+        units, nbytes=nbytes, key=key, max_diff=max_diff,
+        max_rounds=max_rounds, K=K, block_m=block_m, pad_units=pad_units,
+        interpret=interpret).wait()

@@ -30,9 +30,12 @@ caller can fall back to the exact host decoder.
 A pure-jnp engine (``kernel="ref"``) mirrors each stage op-for-op for
 CPU runs and oracle tests; both engines produce bit-identical waves.
 
-For sharded serving, :func:`peel_waves_batched` ``vmap``s the identical
-wave over a leading shard axis — S independent decodes, ragged prefix
+For batched serving, :func:`peel_waves_batched` ``vmap``s the identical
+wave over a leading **unit axis** — U independent decodes, ragged prefix
 lengths as data, one compiled program (see ``ops.decode_device_batched``).
+A unit was originally one shard of a sharded session; through
+``repro.protocol.engine`` it is any (peer, shard) pair in a shape bucket,
+so N concurrent peers cost one dispatch per tick, not N.
 """
 from __future__ import annotations
 
@@ -387,12 +390,12 @@ def peel_waves(sums, checks, counts, *, m: int, nbytes: int, key,
 @functools.lru_cache(maxsize=64)
 def _batched_wave_jit(S: int, mp: int, cap: int, max_diff: int, K: int,
                       L: int, nbytes: int, key):
-    """One jitted, ``vmap``-ed peel wave over the shard axis.
+    """One jitted, ``vmap``-ed peel wave over the unit axis.
 
     Cached per static-shape bucket ``(S, mp, cap, max_diff, K, L)``; the
-    per-shard prefix lengths ``m`` enter as a traced ``(S,)`` vector, so a
-    set of growing shard prefixes re-uses one compiled program until the
-    *longest* shard crosses a tile boundary.  Always the ref engine: dense
+    per-unit prefix lengths ``m`` enter as a traced ``(S,)`` vector, so a
+    set of growing unit prefixes re-uses one compiled program until the
+    *longest* unit crosses a tile boundary.  Always the ref engine: dense
     jnp stages vmap cleanly and compile for both CPU and TPU.
     """
     purity_fn, map_fn, apply_fn = _engines(
@@ -407,26 +410,29 @@ def _batched_wave_jit(S: int, mp: int, cap: int, max_diff: int, K: int,
 def peel_waves_batched(sums, checks, counts, *, m, nbytes: int, key,
                        max_diff: int, K: int, max_rounds: int = 10_000,
                        block_n: int = 256, use_while_loop: bool = False):
-    """Wave-peel ``S`` shards' difference symbols in lockstep on device.
+    """Wave-peel ``S`` decode units' difference symbols in lockstep.
 
-    The batched counterpart of :func:`peel_waves` for sharded serving: the
-    inputs carry a leading shard axis — sums ``(S, mp, L)`` uint32, checks
-    ``(S, mp, 2)`` uint32, counts ``(S, mp, 1)`` int32 — where ``mp`` is the
-    *shared* tile bucket (every shard padded to the longest shard's bucket;
-    rows ``[m[s], mp)`` of shard ``s`` must be zero).  ``m`` is a ``(S,)``
-    int32 vector of true per-shard prefix lengths and is traced data, not a
-    static shape, so ragged shard progress batches into one program.
+    The batched counterpart of :func:`peel_waves` for fan-out serving: the
+    inputs carry a leading **unit axis** — sums ``(S, mp, L)`` uint32,
+    checks ``(S, mp, 2)`` uint32, counts ``(S, mp, 1)`` int32 — where
+    ``mp`` is the *shared* tile bucket (every unit padded to the longest
+    unit's bucket; rows ``[m[s], mp)`` of unit ``s`` must be zero).  A unit
+    is one independent residual prefix: one shard of a sharded session,
+    or, through the protocol engine's cross-peer batching, any ragged
+    peer×shard pair that landed in this shape bucket.  ``m`` is a ``(S,)``
+    int32 vector of true per-unit prefix lengths and is traced data, not a
+    static shape, so ragged unit progress batches into one program.
 
     Every wave is one vmapped dispatch of the ref-engine stages over the
-    shard axis (:func:`_batched_wave_jit`); a shard whose wave recovers
-    nothing simply no-ops while hotter shards keep peeling, and a shard
+    unit axis (:func:`_batched_wave_jit`); a unit whose wave recovers
+    nothing simply no-ops while hotter units keep peeling, and a unit
     that trips ``max_diff`` freezes its own state and raises only its own
-    ``overflow`` flag — the other shards are unaffected (per-shard host
-    fallback, not all-shard).
+    ``overflow`` flag — the other units are unaffected (per-unit host
+    fallback, not all-unit).
 
     Returns ``(state, success)``: a :class:`PeelState` whose every leaf has
-    the leading shard axis, and a ``(S,)`` bool of per-shard success (all
-    of the shard's symbols emptied and no overflow).
+    the leading unit axis, and a ``(S,)`` bool of per-unit success (all
+    of the unit's symbols emptied and no overflow).
 
     ``use_while_loop=True`` stages the whole loop into the jit program via
     ``jax.lax.while_loop`` (one device dispatch total — the TPU serving

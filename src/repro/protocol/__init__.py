@@ -5,20 +5,28 @@ byte frames of the universal coded-symbol stream to any number of
 :class:`Session` peers, each with its own :mod:`pacing <repro.protocol.pacing>`
 policy.  For datacenter-scale fan-out, :class:`ShardedStream` /
 :class:`ShardedSession` hash-partition the key space into S shards served
-as merged wire payloads and decoded in one batched device call per grow
-step.  See ``examples/quickstart.py``, ``examples/multi_peer_sync.py`` and
-``examples/sharded_sync.py``; the layer map lives in
-``docs/ARCHITECTURE.md`` and the byte formats in ``docs/WIRE_FORMAT.md``.
+as merged wire payloads, and a :class:`ReconcileEngine` drives any number
+of concurrent peers through one event-driven plan/execute loop: pending
+(peer, shard, window) decode units coalesce into ONE batched device
+dispatch per shape bucket per tick, and device decode overlaps host frame
+ingest (double-buffering).  See ``examples/quickstart.py``,
+``examples/multi_peer_sync.py`` and ``examples/sharded_sync.py``; the
+layer map lives in ``docs/ARCHITECTURE.md`` and the byte formats in
+``docs/WIRE_FORMAT.md``.
 """
+from .engine import (DecodePlan, PeerState, ProtocolError, ReconcileEngine,
+                     serve)
 from .pacing import Exponential, FixedBlock, LineRate, Pacing
-from .session import (ProtocolError, Session, SessionReport, run_session)
-from .sharded import (ShardedSession, ShardedStream, ShardReport,
-                      ShardedReport, run_sharded_session, shard_of)
+from .reports import (SessionReport, ShardReport, ShardedReport)
+from .session import Session, run_session
+from .sharded import (ShardedSession, ShardedStream, run_sharded_session,
+                      shard_of)
 from .stream import SymbolStream
 
 __all__ = [
-    "Exponential", "FixedBlock", "LineRate", "Pacing", "ProtocolError",
-    "Session", "SessionReport", "ShardReport", "ShardedReport",
-    "ShardedSession", "ShardedStream", "SymbolStream", "run_session",
-    "run_sharded_session", "shard_of",
+    "DecodePlan", "Exponential", "FixedBlock", "LineRate", "Pacing",
+    "PeerState", "ProtocolError", "ReconcileEngine", "Session",
+    "SessionReport", "ShardReport", "ShardedReport", "ShardedSession",
+    "ShardedStream", "SymbolStream", "run_session", "run_sharded_session",
+    "serve", "shard_of",
 ]

@@ -20,8 +20,13 @@ paper's §6 deployment model:
 
 Policies are **stateless**: :meth:`Pacing.next_take` is a pure function of
 the symbols already pulled, so one instance can drive any number of
-sessions — or all S shards of a :class:`~repro.protocol.sharded.ShardedSession`,
-where it is applied to each shard's own progress independently.
+sessions — or every (peer, shard) decode unit of a multi-peer
+:class:`~repro.protocol.engine.ReconcileEngine`, where it is applied to
+each unit's own progress independently.  Statelessness is also what lets
+the engine's double-buffered tick loop compute the *next* round's
+requests while the previous round's decode is still in flight: the
+request depends only on the unit's stream position, never on the decode
+outcome.
 """
 from __future__ import annotations
 
@@ -43,6 +48,16 @@ class Pacing:
         of the stream).
         """
         raise NotImplementedError
+
+    def next_window(self, lo: int, max_m: int) -> tuple[int, int]:
+        """The next stream window ``[lo, hi)`` for a unit at position
+        ``lo``, clamped to the ``max_m`` consumption bound — the one
+        request shape sessions and the engine both speak.
+
+        >>> FixedBlock(8).next_window(16, 20)
+        (16, 20)
+        """
+        return lo, min(lo + self.next_take(lo), max_m)
 
 
 class FixedBlock(Pacing):

@@ -2,7 +2,9 @@
 
 A ``Session`` replaces the three grow-and-peel loops that used to be
 hand-rolled in ``reconcile_sets``, ``checkpoint/reconcile.py`` and
-``examples/multi_peer_sync.py``.  It owns
+``examples/multi_peer_sync.py``.  It is a thin single-peer wrapper over
+the :mod:`engine <repro.protocol.engine>`'s :class:`~repro.protocol.engine.PeerState`
+— one decode unit, plus
 
 * a :class:`~repro.core.stream.StreamDecoder` (subtracts the local set's
   symbols index-wise, peels incrementally, terminates the moment symbol 0
@@ -21,50 +23,23 @@ Pull protocol::
         session.offer_bytes(stream.frames(lo, hi))   # or offer(window, lo)
     report = session.report()
 
-:func:`run_session` packages that loop.
+:func:`run_session` packages that loop (on a single-peer, non-pipelined
+:class:`~repro.protocol.engine.ReconcileEngine`); to reconcile against
+many peers at once — shared ticks, cross-peer batched decode, ingest/
+decode overlap — register several sessions on one engine instead.
 """
 from __future__ import annotations
 
-import dataclasses
-
-import numpy as np
-
-from repro.core.hashing import DEFAULT_KEY, words_to_bytes
-from repro.core.stream import StreamDecoder
+from repro.core.hashing import DEFAULT_KEY
 from repro.core.symbols import CodedSymbols
-from repro.core.wire import decode_frames
 
+from .engine import (PeerState, ProtocolError, execute_round, ingest_frames,
+                     offer_round)
 from .pacing import Exponential, Pacing
+from .reports import SessionReport, build_session_report
 from .stream import SymbolStream
 
-
-class ProtocolError(RuntimeError):
-    """A window arrived out of order / with inconsistent geometry."""
-
-
-@dataclasses.dataclass
-class SessionReport:
-    """Outcome of a completed session."""
-    only_remote: np.ndarray   # (r, L) uint32 words — items only in remote set
-    only_local: np.ndarray    # (s, L) uint32 words — items only in local set
-    nbytes: int               # item length ℓ
-    symbols_used: int         # stream prefix length at the decode signal
-    symbols_received: int     # including pacing overshoot
-    bytes_received: int       # wire-mode traffic (0 for in-process sessions)
-    remote_items: int | None  # |remote set|, learned from frame headers
-
-    def only_remote_bytes(self) -> np.ndarray:
-        """(r, ℓ) uint8 — remote-exclusive items as raw bytes."""
-        return words_to_bytes(self.only_remote, self.nbytes)
-
-    def only_local_bytes(self) -> np.ndarray:
-        return words_to_bytes(self.only_local, self.nbytes)
-
-    def overhead(self, d: int | None = None) -> float:
-        """symbols_used / d (defaults to the recovered difference size)."""
-        if d is None:
-            d = self.only_remote.shape[0] + self.only_local.shape[0]
-        return self.symbols_used / max(d, 1)
+__all__ = ["ProtocolError", "Session", "SessionReport", "run_session"]
 
 
 class Session:
@@ -80,7 +55,8 @@ class Session:
     max_m: abort bound on stream consumption.
     backend: "host" | "device" | "auto" peel engine (see
         :mod:`repro.core.decoder`); "device" wave-peels each window through
-        the Pallas decoder, with host fallback on ``max_diff`` overflow.
+        the kernels' batched decode path, with host fallback on
+        ``max_diff`` overflow.
     max_diff: recovered-item buffer bound for the device engine.
     """
 
@@ -95,23 +71,41 @@ class Session:
             raise ValueError("need nbytes (or a local set to infer it from)")
         key = DEFAULT_KEY if key is None else key
         self.nbytes = nbytes
-        self.pacing = pacing or Exponential(block=8, growth=2.0)
-        self.max_m = max_m
-        self.decoder = StreamDecoder(nbytes, local=local, key=key,
-                                     backend=backend, max_diff=max_diff)
-        self.bytes_received = 0
-        self.remote_items: int | None = None
+        self._peer = PeerState(
+            nbytes=nbytes, key=key, locals_=[local],
+            pacing=pacing or Exponential(block=8, growth=2.0),
+            max_m=max_m, backend=backend, max_diff=max_diff, sharded=False)
+        self.decoder = self._peer.units[0].decoder
 
     # -- state --------------------------------------------------------------
     @property
     def backend(self) -> str:
-        return self.decoder.backend
+        return self._peer.backend
 
     def set_backend(self, backend: str) -> None:
         """Switch the peel engine; safe between windows (both engines keep
         the identical decoder state)."""
-        from repro.core.decoder import resolve_backend
-        self.decoder.backend = resolve_backend(backend)
+        self._peer.set_backend(backend)
+
+    @property
+    def pacing(self) -> Pacing:
+        return self._peer.pacing
+
+    @pacing.setter
+    def pacing(self, pacing: Pacing) -> None:
+        self._peer.pacing = pacing
+
+    @property
+    def max_m(self) -> int:
+        return self._peer.max_m
+
+    @property
+    def bytes_received(self) -> int:
+        return self._peer.bytes_received
+
+    @property
+    def remote_items(self) -> int | None:
+        return self._peer.units[0].remote_items
 
     @property
     def decoded(self) -> bool:
@@ -135,13 +129,11 @@ class Session:
         been consumed without decoding — the reconciliation is diverging
         (wrong key, corrupted stream, or a difference beyond the bound).
         """
-        if self.decoded:
+        reqs = self._peer.requests()
+        if not reqs:
             return None
-        lo = self.symbols_received
-        if lo >= self.max_m:
-            raise RuntimeError(
-                f"reconciliation did not converge within {self.max_m} symbols")
-        return lo, min(lo + self.pacing.next_take(lo), self.max_m)
+        (_, lo, hi), = reqs
+        return lo, hi
 
     def offer(self, sym: CodedSymbols, start: int = 0) -> bool:
         """Feed stream symbols [start, start+sym.m) as in-process views.
@@ -153,17 +145,7 @@ class Session:
         session's.  The symbols are copied before peeling, so zero-copy
         stream views may be passed directly.  Returns ``decoded``.
         """
-        have = self.symbols_received
-        if start > have:
-            raise ProtocolError(f"gap: expected window at {have}, got {start}")
-        if sym.nbytes != self.nbytes:
-            raise ProtocolError(f"geometry mismatch: ℓ={sym.nbytes}, "
-                                f"session ℓ={self.nbytes}")
-        if start < have:
-            if start + sym.m <= have:
-                return self.decoded          # wholly stale window
-            sym = sym.window(have - start)
-        return self.decoder.receive(sym)
+        return offer_round(self._peer, [(0, sym, start)])
 
     def offer_bytes(self, data: bytes) -> bool:
         """Feed one wire frame (:func:`repro.core.wire.encode_frames`
@@ -171,10 +153,8 @@ class Session:
         window start and the remote set size, which is recorded on
         :attr:`remote_items` — then :meth:`offer` rules apply.  Returns
         ``decoded``."""
-        sym, n_items, start = decode_frames(data)
-        self.bytes_received += len(data)
-        self.remote_items = n_items
-        return self.offer(sym, start)
+        execute_round(ingest_frames(self._peer, data))
+        return self.decoded
 
     # -- outcome ------------------------------------------------------------
     def result(self):
@@ -188,14 +168,7 @@ class Session:
         (``symbols_used`` then falls back to ``symbols_received``); after
         decode it is the final reconciliation result.
         """
-        only_remote, only_local = self.decoder.result()
-        return SessionReport(
-            only_remote=only_remote, only_local=only_local,
-            nbytes=self.nbytes,
-            symbols_used=self.symbols_used or self.symbols_received,
-            symbols_received=self.symbols_received,
-            bytes_received=self.bytes_received,
-            remote_items=self.remote_items)
+        return build_session_report(self._peer)
 
 
 def run_session(stream: SymbolStream, session: Session,
@@ -218,22 +191,16 @@ def run_session(stream: SymbolStream, session: Session,
         :meth:`Session.set_backend`, the switch persists on the session
         afterwards.
 
-    Returns the session's report (:class:`SessionReport`, or
-    :class:`~repro.protocol.sharded.ShardedReport` for sharded pairs).
+    The loop itself is one single-peer, non-pipelined
+    :class:`~repro.protocol.engine.ReconcileEngine` — the exact serial
+    request → offer → decode lockstep.  Returns the session's report
+    (:class:`SessionReport`, or
+    :class:`~repro.protocol.reports.ShardedReport` for sharded pairs).
     """
+    from .engine import serve
     from .sharded import ShardedSession, run_sharded_session
     if isinstance(session, ShardedSession):
         return run_sharded_session(stream, session, wire=wire,
                                    backend=backend)
-    if backend is not None:
-        session.set_backend(backend)
-    while True:
-        win = session.request()
-        if win is None:
-            break
-        lo, hi = win
-        if wire:
-            session.offer_bytes(stream.frames(lo, hi))
-        else:
-            session.offer(stream.window(lo, hi), lo)
-    return session.report()
+    return serve([(stream, session)], wire=wire, backend=backend,
+                 pipeline=False)[0]

@@ -17,17 +17,20 @@ spaces (per-partition sketches are independent, so they merge trivially):
   serves **merged windows**: one wire payload interleaving per-shard
   columnar frames behind a shard-id'd header extension
   (:func:`repro.core.wire.encode_shard_frames`);
-* a :class:`ShardedSession` holds one incremental decoder per shard and
-  decodes every shard's residual in **one batched device call** per grow
-  step (:func:`repro.kernels.ops.decode_device_batched` — the peel wave
-  ``vmap``-ed over the shard axis, per-shard prefix lengths as data);
+* a :class:`ShardedSession` is the S-unit wrapper over the
+  :mod:`engine <repro.protocol.engine>`'s
+  :class:`~repro.protocol.engine.PeerState`: one incremental decoder per
+  shard, every grow step decoded in **one batched device call**
+  (:func:`repro.kernels.ops.decode_device_batched` — the peel wave
+  ``vmap``-ed over the unit axis, per-unit prefix lengths as data);
 * pacing is **per shard**: each shard pulls by its own progress, so a hot
   shard (large local difference) keeps growing its window while settled
   shards — each terminated by its own ρ(0)=1 signal — stop requesting.
 
 Because each shard sees ~d/S of the difference, per-shard ``max_diff``
 stays small and the fixed-shape device decoder stays in its fast path; a
-shard that still overflows falls back to the exact host peel *alone*.
+shard that still overflows falls back to the exact host peel *alone* and
+stays pinned to the host from then on.
 
 Shard invariance: for any S, the union of per-shard symmetric differences
 is exactly the unsharded symmetric difference (items never cross shards —
@@ -35,19 +38,20 @@ the partition function depends only on the item and the key).
 """
 from __future__ import annotations
 
-import dataclasses
-
 import numpy as np
 
-from repro.core.decoder import resolve_backend
-from repro.core.hashing import DEFAULT_KEY, bytes_to_words, words_to_bytes
+from repro.core.hashing import DEFAULT_KEY, bytes_to_words
 from repro.core.mapping import map_seeds
-from repro.core.stream import StreamDecoder
-from repro.core.wire import decode_shard_frames, encode_shard_frames
+from repro.core.wire import encode_shard_frames
 
+from .engine import (PeerState, ProtocolError, execute_round, ingest_payload,
+                     offer_round)
 from .pacing import Exponential, Pacing
-from .session import ProtocolError
+from .reports import (ShardReport, ShardedReport, build_sharded_report)
 from .stream import SymbolStream
+
+__all__ = ["ShardReport", "ShardedReport", "ShardedSession", "ShardedStream",
+           "run_sharded_session", "shard_of"]
 
 
 def _coerce_words(items, nbytes: int) -> np.ndarray:
@@ -183,63 +187,15 @@ class ShardedStream:
         return ShardedSession(local=local, **kwargs)
 
 
-@dataclasses.dataclass
-class ShardReport:
-    """Per-shard slice of a completed sharded reconciliation."""
-    shard: int
-    only_remote: np.ndarray   # (r, L) uint32 words — remote-only, this shard
-    only_local: np.ndarray    # (s, L) uint32 words — local-only, this shard
-    symbols_used: int         # shard prefix length at its decode signal
-    symbols_received: int     # including pacing overshoot
-    remote_items: int | None  # |remote shard set|, from frame headers
-
-
-@dataclasses.dataclass
-class ShardedReport:
-    """Outcome of a completed :class:`ShardedSession`.
-
-    The aggregate fields mirror :class:`~repro.protocol.session.SessionReport`
-    (the union over shards *is* the unsharded difference — shard
-    invariance); ``shards`` keeps the per-shard breakdown.
-    """
-    shards: list[ShardReport]
-    only_remote: np.ndarray   # (r, L) uint32 words, all shards concatenated
-    only_local: np.ndarray    # (s, L) uint32 words
-    nbytes: int               # item length ℓ
-    symbols_used: int         # Σ per-shard symbols at decode
-    symbols_received: int     # Σ per-shard symbols received
-    bytes_received: int       # total merged-payload traffic (0 in-process)
-    remote_items: int | None  # Σ per-shard set sizes (None until all known)
-    grow_steps: int           # merged windows consumed (batched decodes run)
-
-    def only_remote_bytes(self) -> np.ndarray:
-        """(r, ℓ) uint8 — remote-exclusive items as raw bytes."""
-        return words_to_bytes(self.only_remote, self.nbytes)
-
-    def only_local_bytes(self) -> np.ndarray:
-        return words_to_bytes(self.only_local, self.nbytes)
-
-    def overhead(self, d: int | None = None) -> float:
-        """symbols_used / d (defaults to the recovered difference size)."""
-        if d is None:
-            d = self.only_remote.shape[0] + self.only_local.shape[0]
-        return self.symbols_used / max(d, 1)
-
-
-class _ShardState:
-    """One shard's decoder + protocol bookkeeping inside a ShardedSession."""
-
-    __slots__ = ("decoder", "remote_items")
-
-    def __init__(self, decoder: StreamDecoder):
-        self.decoder = decoder
-        self.remote_items: int | None = None
-
-
 class ShardedSession:
     """Incremental reconciliation of a sharded local set against a
     :class:`ShardedStream`, one decoder per shard, one batched device
     decode per grow step.
+
+    A thin S-unit wrapper over the engine's
+    :class:`~repro.protocol.engine.PeerState` — validation, absorb,
+    shape-bucketed batched dispatch, per-unit overflow fallback and
+    termination all live in :mod:`repro.protocol.engine`.
 
     Parameters
     ----------
@@ -249,7 +205,7 @@ class ShardedSession:
     n_shards, nbytes, key: partition geometry — inferred from ``local``
         when given.  Both ends must agree on all three (the wire payload
         carries ``n_shards`` and each frame carries ``nbytes``; mismatches
-        raise :class:`~repro.protocol.session.ProtocolError`).
+        raise :class:`~repro.protocol.engine.ProtocolError`).
     pacing: per-shard window schedule.  Policies are stateless (a pure
         function of that shard's progress), so one instance drives all
         shards independently; default is the session-standard doubling
@@ -258,7 +214,9 @@ class ShardedSession:
     backend: "host" | "device" | "auto".  "device" decodes all shards that
         received symbols in ONE :func:`repro.kernels.ops.decode_device_batched`
         call per grow step; a shard whose ``max_diff`` overflows falls back
-        to the exact host peel for that shard only.
+        to the exact host peel for that shard only, and stays **pinned to
+        the host** afterwards — a later ``set_backend("device")`` will not
+        re-dispatch a residual already known to exceed the device buffers.
     max_diff: per-shard bound on the device decoder's fixed recovered-item
         buffers (sharding divides the difference ~uniformly, so this can be
         ~d/S plus slack rather than d).
@@ -287,34 +245,59 @@ class ShardedSession:
         self.n_shards = n_shards
         self.nbytes = nbytes
         self.key = key
-        self.pacing = pacing or Exponential(block=8, growth=2.0)
-        self.max_m = max_m
-        self.backend = resolve_backend(backend)
-        self.max_diff = max_diff
-        self.bytes_received = 0
-        self.grow_steps = 0
-        # per-shard decoders peel on the host; THIS session owns the
-        # device path so all shards batch into one dispatch
-        self._shards = [
-            _ShardState(StreamDecoder(
-                nbytes, local=local.shards[s].encoder if local else None,
-                key=key, backend="host"))
-            for s in range(n_shards)]
+        # per-shard decoders peel on the host; the ENGINE owns the device
+        # path so all units (here: shards) batch into one dispatch
+        self._peer = PeerState(
+            nbytes=nbytes, key=key,
+            locals_=[local.shards[s].encoder if local else None
+                     for s in range(n_shards)],
+            pacing=pacing or Exponential(block=8, growth=2.0),
+            max_m=max_m, backend=backend, max_diff=max_diff, sharded=True)
+        self._shards = self._peer.units
 
     # -- state --------------------------------------------------------------
+    @property
+    def backend(self) -> str:
+        return self._peer.backend
+
     def set_backend(self, backend: str) -> None:
         """Switch the decode engine; safe between grow steps (both engines
-        maintain identical per-shard decoder state)."""
-        self.backend = resolve_backend(backend)
+        maintain identical per-shard decoder state).  Shards that already
+        overflowed the device buffers stay pinned to the host."""
+        self._peer.set_backend(backend)
+
+    @property
+    def pacing(self) -> Pacing:
+        return self._peer.pacing
+
+    @pacing.setter
+    def pacing(self, pacing: Pacing) -> None:
+        self._peer.pacing = pacing
+
+    @property
+    def max_m(self) -> int:
+        return self._peer.max_m
+
+    @property
+    def max_diff(self) -> int | None:
+        return self._peer.max_diff
+
+    @property
+    def bytes_received(self) -> int:
+        return self._peer.bytes_received
+
+    @property
+    def grow_steps(self) -> int:
+        return self._peer.grow_steps
 
     @property
     def decoded(self) -> bool:
         """True once every shard has hit its ρ(0)=1 termination signal."""
-        return all(st.decoder.decoded for st in self._shards)
+        return self._peer.decoded
 
     @property
     def symbols_received(self) -> int:
-        return sum(st.decoder.symbols_received for st in self._shards)
+        return self._peer.symbols_received
 
     # -- pull protocol ------------------------------------------------------
     def requests(self) -> list[tuple[int, int, int]]:
@@ -325,32 +308,14 @@ class ShardedSession:
         list, hot shards keep growing.  Raises ``RuntimeError`` if any
         shard exceeds ``max_m`` without decoding.
         """
-        reqs = []
-        for s, st in enumerate(self._shards):
-            if st.decoder.decoded:
-                continue
-            lo = st.decoder.symbols_received
-            if lo >= self.max_m:
-                raise RuntimeError(f"shard {s} did not converge within "
-                                   f"{self.max_m} symbols")
-            reqs.append((s, lo, min(lo + self.pacing.next_take(lo),
-                                    self.max_m)))
-        return reqs
+        return self._peer.requests()
 
     def offer_payload(self, data: bytes) -> bool:
         """Consume one merged wire payload (all shards' frames), then run
         ONE batched decode over every shard that received symbols.
         Returns ``decoded``."""
-        n_shards, frames = decode_shard_frames(data)
-        if n_shards != self.n_shards:
-            raise ProtocolError(f"partition mismatch: payload has "
-                                f"{n_shards} shards, session {self.n_shards}")
-        self.bytes_received += len(data)
-        windows = []
-        for shard_id, sym, n_items, start in frames:
-            self._shards[shard_id].remote_items = n_items
-            windows.append((shard_id, sym, start))
-        return self.offer_windows(windows)
+        execute_round(ingest_payload(self._peer, data))
+        return self.decoded
 
     def offer_windows(self, windows) -> bool:
         """Feed ``(shard, symbols, start)`` windows (the in-process peer of
@@ -360,86 +325,17 @@ class ShardedSession:
         geometry) before ANY state mutates, so a rejected round can be
         corrected and retried without losing symbols.  Returns
         ``decoded``."""
-        # pass 1: validate the whole round against simulated per-shard
-        # positions (a round may carry several windows for one shard)
-        have = {}
-        accepted = []       # (shard, trimmed symbols) in arrival order
-        for shard_id, sym, start in windows:
-            if not 0 <= shard_id < self.n_shards:
-                raise ProtocolError(f"shard_id {shard_id} outside "
-                                    f"[0, {self.n_shards})")
-            pos = have.setdefault(
-                shard_id, self._shards[shard_id].decoder.symbols_received)
-            if start > pos:
-                raise ProtocolError(f"shard {shard_id} gap: expected window "
-                                    f"at {pos}, got {start}")
-            if sym.nbytes != self.nbytes:
-                raise ProtocolError(f"geometry mismatch: ℓ={sym.nbytes}, "
-                                    f"session ℓ={self.nbytes}")
-            if start < pos:
-                if start + sym.m <= pos:
-                    continue                      # wholly stale window
-                sym = sym.window(pos - start)
-            have[shard_id] = pos + sym.m
-            accepted.append((shard_id, sym))
-        # pass 2: absorb (decoder positions evolve exactly as simulated)
-        absorbed = [(shard_id, *self._shards[shard_id].decoder.absorb(sym))
-                    for shard_id, sym in accepted]
-        if absorbed:
-            self.grow_steps += 1
-            if self.backend == "device":
-                self._decode_batched(absorbed)
-            else:
-                for shard_id, old, m in absorbed:
-                    self._shards[shard_id].decoder.peel_window(old, m)
-        for shard_id, _, _ in absorbed:
-            self._shards[shard_id].decoder.mark_decoded()
-        return self.decoded
-
-    def _decode_batched(self, absorbed) -> None:
-        """One ``decode_device_batched`` dispatch over every absorbed
-        shard's residual; per-shard overflow falls back to the host peel
-        for that shard alone."""
-        from repro.kernels.ops import decode_device_batched
-        decs = [self._shards[s].decoder for s, _, _ in absorbed]
-        results = decode_device_batched(
-            [d.work for d in decs], nbytes=self.nbytes, key=self.key,
-            max_diff=self.max_diff)
-        for (shard_id, old, m), dec, res in zip(absorbed, decs, results):
-            if res.overflow:
-                dec.peel_window(old, m)
-            else:
-                dec.merge_device_result(res)
+        return offer_round(self._peer, windows)
 
     # -- outcome ------------------------------------------------------------
     def result(self):
         """(only_remote, only_local) uint32 word arrays, shards merged."""
-        rem = [st.decoder.result()[0] for st in self._shards]
-        loc = [st.decoder.result()[1] for st in self._shards]
+        rem = [u.decoder.result()[0] for u in self._shards]
+        loc = [u.decoder.result()[1] for u in self._shards]
         return np.concatenate(rem), np.concatenate(loc)
 
     def report(self) -> ShardedReport:
-        per_shard = []
-        for s, st in enumerate(self._shards):
-            only_remote, only_local = st.decoder.result()
-            per_shard.append(ShardReport(
-                shard=s, only_remote=only_remote, only_local=only_local,
-                symbols_used=st.decoder.decoded_at or
-                st.decoder.symbols_received,
-                symbols_received=st.decoder.symbols_received,
-                remote_items=st.remote_items))
-        counts = [sr.remote_items for sr in per_shard]
-        return ShardedReport(
-            shards=per_shard,
-            only_remote=np.concatenate([sr.only_remote for sr in per_shard]),
-            only_local=np.concatenate([sr.only_local for sr in per_shard]),
-            nbytes=self.nbytes,
-            symbols_used=sum(sr.symbols_used for sr in per_shard),
-            symbols_received=sum(sr.symbols_received for sr in per_shard),
-            bytes_received=self.bytes_received,
-            remote_items=None if any(c is None for c in counts)
-            else sum(counts),
-            grow_steps=self.grow_steps)
+        return build_sharded_report(self._peer)
 
 
 def run_sharded_session(stream: ShardedStream, session: ShardedSession,
@@ -451,7 +347,9 @@ def run_sharded_session(stream: ShardedStream, session: ShardedSession,
     all of them with one merged payload (``wire=True``, the native sharded
     mode — exactly the bytes two networked peers exchange) or with
     in-process zero-copy windows (``wire=False``), and hands them to the
-    session, which decodes all touched shards in one batched step.
+    session, which decodes all touched shards in one batched step — a
+    single-peer, non-pipelined
+    :class:`~repro.protocol.engine.ReconcileEngine` loop.
     ``backend`` switches the session's engine first, like
     :meth:`ShardedSession.set_backend`, and persists afterwards.
 
@@ -459,19 +357,10 @@ def run_sharded_session(stream: ShardedStream, session: ShardedSession,
     silently mis-reconcile in-process (the wire path carries S in the
     payload header), so the driver rejects them up front.
     """
+    from .engine import serve
     if stream.n_shards != session.n_shards:
         raise ProtocolError(f"partition mismatch: stream has "
                             f"{stream.n_shards} shards, session "
                             f"{session.n_shards}")
-    if backend is not None:
-        session.set_backend(backend)
-    while True:
-        reqs = session.requests()
-        if not reqs:
-            break
-        if wire:
-            session.offer_payload(stream.payload(reqs))
-        else:
-            session.offer_windows(
-                [(s, stream.window(s, lo, hi), lo) for s, lo, hi in reqs])
-    return session.report()
+    return serve([(stream, session)], wire=wire, backend=backend,
+                 pipeline=False)[0]

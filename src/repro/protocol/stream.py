@@ -13,6 +13,12 @@ the cache and detaches them); sessions and the frame codec do exactly that.
 When the underlying set changes, ``add_items`` / ``remove_items`` update
 the cached prefix *in place* (linearity, §4.1) — every session keeps
 pulling from the same stream.
+
+Concurrent peers are first-class consumers: a
+:class:`~repro.protocol.engine.ReconcileEngine` registers many
+``(stream, session)`` pairs against the same (or different) streams and
+pulls all of their windows in shared ticks — the cache still extends at
+most once per tick, by whichever peer reaches deepest.
 """
 from __future__ import annotations
 

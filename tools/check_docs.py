@@ -62,13 +62,16 @@ def run_readme_snippets() -> list[str]:
 
 
 def run_doctests() -> list[str]:
+    import repro.protocol.engine
     import repro.protocol.pacing
+    import repro.protocol.reports
     import repro.protocol.session
     import repro.protocol.sharded
     import repro.protocol.stream
     errors = []
     total = 0
-    for mod in (repro.protocol.pacing, repro.protocol.session,
+    for mod in (repro.protocol.engine, repro.protocol.pacing,
+                repro.protocol.reports, repro.protocol.session,
                 repro.protocol.sharded, repro.protocol.stream):
         res = doctest.testmod(mod, verbose=False)
         total += res.attempted
